@@ -1,0 +1,133 @@
+"""HDM coherence modes: host-managed (HDM-H) vs device-managed (HDM-DB).
+
+The paper's central scalability argument (§II-A, §II-C): with DMC, devices
+carry their own DCOH and coherence traffic resolves peer-to-peer, "eliminating
+the need for a central coherence engine".  Under HDM-H every coherent miss
+must be mediated by the host's coherency bridge — on a multi-requester fabric
+that adds a host round-trip per miss *and* concentrates traffic on the host
+links (a bridge bottleneck, exactly like Fig. 10's tree root).
+
+Setup: N accelerators + 1 host on a spine-leaf fabric, each accelerator
+issuing coherent accesses to pooled type-2/3 memory devices:
+
+  * HDM-DB: requests route accelerator -> memory directly; the device-side SF
+    handles invalidations (BISnp latency folded per §V-B rates).
+  * HDM-H : requests route accelerator -> host -> memory (coherency-bridge
+    mediation), so every access crosses the host leaf twice.
+
+Reported: aggregate bandwidth and mean latency vs accelerator count — the
+scalability curve the paper argues DMC wins.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import request_stats, simulate
+
+from .common import Row, Timer
+
+PORT = 64_000
+FIXED = 26_000
+
+
+def build_fabric(n_acc: int, n_mem: int = 4):
+    kinds, links = [], []
+
+    def add(kind):
+        kinds.append(kind)
+        return len(kinds) - 1
+
+    spines = [add(T.SWITCH), add(T.SWITCH)]
+    host_leaf = add(T.SWITCH)
+    acc_leaves = [add(T.SWITCH) for _ in range(max(n_acc // 4, 1))]
+    mem_leaves = [add(T.SWITCH) for _ in range(max(n_mem // 2, 1))]
+    for lf in [host_leaf] + acc_leaves + mem_leaves:
+        for sp in spines:
+            links.append(T.LinkSpec(lf, sp, PORT, FIXED))
+    host = add(T.REQUESTER)
+    links.append(T.LinkSpec(host, host_leaf, PORT, FIXED))
+    # the host's coherency bridge: the serviceable endpoint HDM-H requests
+    # must visit before memory (CXL.cache mediation)
+    host_cb = add(T.MEMORY)
+    links.append(T.LinkSpec(host_cb, host_leaf, PORT, FIXED))
+    accs = []
+    for i in range(n_acc):
+        a = add(T.REQUESTER)
+        accs.append(a)
+        links.append(T.LinkSpec(a, acc_leaves[i % len(acc_leaves)], PORT, FIXED))
+    mems = []
+    for i in range(n_mem):
+        m = add(T.MEMORY)
+        mems.append(m)
+        links.append(T.LinkSpec(m, mem_leaves[i % len(mem_leaves)], PORT, FIXED))
+    topo = T.Topology(np.asarray(kinds, np.int64), links, name="coh")
+    return topo, host, host_cb, accs, mems
+
+
+def run_mode(mode: str, n_acc: int, n_per: int = 300):
+    """HDM-DB: direct accesses.  HDM-H: each access first visits the host
+    (coherency bridge), modeled by targeting the host's leaf as an
+    intermediate hop via a two-transaction decomposition."""
+    topo, host, host_cb, accs, mems = build_fabric(n_acc)
+    graph = topo.build()
+    rng = np.random.default_rng(3)
+
+    if mode == "hdm_db":
+        specs = [RequesterSpec(node=a, n_requests=n_per, targets=mems,
+                               issue_interval_ps=1_000, seed=i)
+                 for i, a in enumerate(accs)]
+        wl = build_workload(graph, specs, header_bytes=16, warmup_frac=0.25,
+                            route_choice=rng.integers(0, 1 << 20,
+                                                      n_per * n_acc))
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+        r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
+                          wl.measured)
+        return (float(r["steady_bandwidth_MBps"]),
+                float(r["mean_latency_ps"]) / 1e3)
+
+    # hdm_h: leg 1 accelerator->host memory-side proxy; leg 2 host->memory.
+    # Model as chained transactions: each access becomes acc->host (header
+    # snoop) then host->mem (data), the host mediating every miss.
+    specs = [RequesterSpec(node=a, n_requests=n_per, targets=[host_cb],
+                           issue_interval_ps=1_000, seed=i, payload_bytes=16)
+             for i, a in enumerate(accs)]
+    # host relays all traffic to the memories at matching rate
+    specs.append(RequesterSpec(node=host, n_requests=n_per * n_acc,
+                               targets=mems,
+                               issue_interval_ps=max(1_000 // n_acc, 60),
+                               seed=99))
+    wl = build_workload(graph, specs, header_bytes=16, warmup_frac=0.25,
+                        route_choice=rng.integers(0, 1 << 20,
+                                                  2 * n_per * n_acc))
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+    r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
+                      wl.measured)
+    # latency of a mediated access = snoop leg + data leg (mean of each class)
+    lat = np.asarray(r["latency_ps"])
+    meas = np.asarray(wl.measured)
+    own = wl.requester != host
+    lat_total = lat[meas & own].mean() + lat[meas & ~own].mean()
+    relay = wl.requester == host
+    comp = np.asarray(sched.complete)[relay]
+    iss = np.asarray(wl.issue_ps)[relay]
+    bw = (n_per * n_acc) * 64 * 1e12 / (comp.max() - iss.min()) / 1e6
+    return float(bw), float(lat_total) / 1e3
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    counts = (2, 4) if quick else (2, 4, 8)
+    for n_acc in counts:
+        with Timer() as t:
+            bw_db, lat_db = run_mode("hdm_db", n_acc)
+            bw_h, lat_h = run_mode("hdm_h", n_acc)
+        rows.append(Row(
+            f"coherence/scale{n_acc}", t.us,
+            f"hdm_db_bw={bw_db:.0f};hdm_h_bw={bw_h:.0f};"
+            f"dmc_speedup={bw_db / max(bw_h, 1):.2f};"
+            f"hdm_db_lat={lat_db:.0f}ns;hdm_h_lat={lat_h:.0f}ns",
+        ))
+    return rows

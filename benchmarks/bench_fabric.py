@@ -1,0 +1,52 @@
+"""Framework bench: ESF fabric model vs analytic collective costs.
+
+Beyond-paper: the ESF engine predicts TPU collective times on the v5e torus
+(`core.fabric_model`).  This bench cross-checks the simulated ring collectives
+against the closed-form alpha-beta model (they must agree when there is no
+contention) and quantifies the contention penalty the analytic model misses
+for all-to-all (MoE dispatch) — the exact class of effect the paper builds a
+simulator to expose.
+"""
+
+from __future__ import annotations
+
+from repro.core.fabric_model import (TPUFabric, analytic_ring_seconds,
+                                     predict_collective)
+
+from .common import Row, Timer
+
+MB = 1 << 20
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    fab = TPUFabric(nx=8 if quick else 16, ny=8 if quick else 16)
+    graph = fab.build()
+    sizes = (16 * MB, 128 * MB) if quick else (16 * MB, 64 * MB, 256 * MB)
+    for nbytes in sizes:
+        with Timer() as t:
+            ar = predict_collective(fab, graph, "all_reduce", "x", nbytes)
+        ana = analytic_ring_seconds(nbytes, fab.nx)
+        rows.append(Row(
+            f"fabric/all_reduce/{nbytes // MB}MB", t.us,
+            f"sim_ms={ar.seconds * 1e3:.3f};alpha_beta_ms={ana * 1e3:.3f};"
+            f"ratio={ar.seconds / ana:.3f}",
+        ))
+    with Timer() as t:
+        a2a = predict_collective(fab, graph, "all_to_all", "x", 64 * MB)
+    naive = 64 * MB / fab.nx * (fab.nx - 1) / (50_000 * 1e6 * 2)
+    rows.append(Row(
+        "fabric/all_to_all/64MB", t.us,
+        f"sim_ms={a2a.seconds * 1e3:.3f};contention_free_ms={naive * 1e3:.3f};"
+        f"contention_factor={a2a.seconds / naive:.2f}",
+    ))
+    if not quick:
+        fab2 = TPUFabric(nx=16, ny=16, pods=2)
+        graph2 = fab2.build()
+        with Timer() as t:
+            pr = predict_collective(fab2, graph2, "pod_all_reduce", "x", 64 * MB)
+        rows.append(Row(
+            "fabric/pod_all_reduce/64MB", t.us,
+            f"sim_ms={pr.seconds * 1e3:.3f};detail={pr.detail}",
+        ))
+    return rows

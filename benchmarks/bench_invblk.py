@@ -1,0 +1,60 @@
+"""Paper Fig. 15: InvBlk command length (claim F5).
+
+Setup per §V-C: two requesters issue sequential (streaming) requests; cache,
+SF size and request counts as in §V-B; the SF uses block-length-prioritized
+victim selection (longest run of address-contiguous entries, LIFO among ties)
+and clears up to `invblk_max` contiguous lines per BISnp.  Unlike §V-B the bus
+is finite, so flushed lines compete with demand traffic for bandwidth.
+
+Expected reproduction: length 2 amortizes BISnp waiting and improves
+bandwidth/latency; lengths 3-4 pay growing requester-cache access overheads
+and bus competition from flush data, so they give no further improvement
+(paper: "no improvement compared to length=1").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.snoop_filter import (CacheConfig, SFConfig,
+                                     make_sequential_stream, simulate_sf)
+
+from .common import Row, Timer
+
+
+def run_len(invblk: int, n: int, footprint: int):
+    cap = int(0.2 * footprint)
+    addr, wr, rid = make_sequential_stream(n, footprint, n_requesters=2,
+                                           write_ratio=0.5, seed=5)
+    cfg = SFConfig(capacity=cap, policy="blp", invblk_max=invblk,
+                   footprint_lines=footprint, bus_MBps=12_000,
+                   writeback_ps=30_000)
+    res = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=cap),
+                      n_requesters=2)
+    lat = np.asarray(res.latency_ps)[n // 2:]
+    return {
+        "bandwidth_MBps": float(res.bandwidth_MBps),
+        "mean_latency_ns": float(lat.mean()) / 1000.0,
+        "bisnp": int(res.bisnp_events),
+        "lines": int(res.invalidated_lines),
+    }
+
+
+def run(quick: bool = False) -> list[Row]:
+    n = 8_000 if quick else 32_000
+    footprint = 2_048 if quick else 4_096
+    rows: list[Row] = []
+    base = None
+    for L in (1, 2, 3, 4):
+        with Timer() as t:
+            m = run_len(L, n, footprint)
+        if base is None:
+            base = m
+        rows.append(Row(
+            f"fig15/invblk_len{L}", t.us,
+            f"bw_vs_len1={m['bandwidth_MBps'] / base['bandwidth_MBps']:.3f};"
+            f"lat_vs_len1={m['mean_latency_ns'] / base['mean_latency_ns']:.3f};"
+            f"bisnp_vs_len1={m['bisnp'] / max(base['bisnp'], 1):.3f};"
+            f"lines={m['lines']}",
+        ))
+    return rows

@@ -1,0 +1,112 @@
+"""Framework bench: kernel oracles (XLA fast paths) + interpret-mode checks.
+
+This container is CPU-only, so wall-times here measure the pure-jnp oracle
+paths (the XLA baselines the Pallas kernels must beat on TPU); each row also
+re-validates kernel-vs-oracle agreement at a representative shape so the
+bench doubles as an integration check.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_attention_gqa
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.link_contention.kernel import segmented_depart
+from repro.kernels.link_contention.ref import segmented_depart_ref
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+
+from .common import Row, Timer
+
+
+def _time(f, *args, reps=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    with Timer() as t:
+        for _ in range(reps):
+            out = f(*args)
+        jax.block_until_ready(out)
+    return out, t.us / reps
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+
+    # flash attention
+    b, kv, g, s, d = (1, 2, 2, 512, 64) if quick else (2, 4, 4, 1024, 128)
+    q = jnp.asarray(rng.normal(0, 1, (b, kv, g, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, kv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, kv, s, d)).astype(np.float32))
+    ref_fn = jax.jit(lambda a, b_, c: flash_attention_ref(a, b_, c, causal=True))
+    ref, us = _time(ref_fn, q, k, v)
+    small = flash_attention_gqa(q[:, :1, :1, :256], k[:, :1, :256],
+                                v[:, :1, :256], causal=True, q_blk=128,
+                                kv_blk=128, interpret=True)
+    ok = np.allclose(np.asarray(small),
+                     np.asarray(flash_attention_ref(
+                         q[:, :1, :1, :256], k[:, :1, :256], v[:, :1, :256],
+                         causal=True)), atol=1e-4)
+    flops = 4 * b * kv * g * s * s * d / 2
+    rows.append(Row("kernels/flash_attention", us,
+                    f"xla_oracle_gflops={flops / us / 1e3:.1f};"
+                    f"pallas_interpret_allclose={ok}"))
+
+    # rglru
+    b2, s2, d2 = (2, 1024, 512) if quick else (4, 4096, 1024)
+    a = jnp.asarray(rng.uniform(0.9, 0.999, (b2, s2, d2)).astype(np.float32))
+    bb = jnp.asarray(rng.normal(0, 0.1, (b2, s2, d2)).astype(np.float32))
+    ref_fn = jax.jit(rglru_scan_ref)
+    _, us = _time(ref_fn, a, bb)
+    small = rglru_scan_pallas(a[:1, :256, :128], bb[:1, :256, :128],
+                              chunk=128, d_blk=128, interpret=True)
+    ok = np.allclose(np.asarray(small),
+                     np.asarray(rglru_scan_ref(a[:1, :256, :128],
+                                               bb[:1, :256, :128])), atol=1e-5)
+    rows.append(Row("kernels/rglru_scan", us,
+                    f"elems_per_us={b2 * s2 * d2 / us:.0f};"
+                    f"pallas_interpret_allclose={ok}"))
+
+    # ssd
+    b3, s3, h3, p3, n3 = (1, 1024, 4, 64, 128) if quick else (2, 4096, 8, 64, 128)
+    x = jnp.asarray(rng.normal(0, 1, (b3, s3, h3, p3)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b3, s3, h3)).astype(np.float32))
+    al = jnp.asarray(np.log(rng.uniform(1, 8, h3)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(0, 1, (b3, s3, n3)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(0, 1, (b3, s3, n3)).astype(np.float32))
+    ref_fn = jax.jit(lambda *xs: ssd_chunk_ref(*xs))
+    _, us = _time(ref_fn, x, dt, al, bm, cm)
+    small = ssd_chunk_pallas(x[:1, :256], dt[:1, :256], al, bm[:1, :256],
+                             cm[:1, :256], chunk=128, interpret=True)
+    ok = np.allclose(np.asarray(small),
+                     np.asarray(ssd_chunk_ref(x[:1, :256], dt[:1, :256], al,
+                                              bm[:1, :256], cm[:1, :256])),
+                     atol=3e-4)
+    rows.append(Row("kernels/ssd_chunk", us,
+                    f"tokens_per_us={b3 * s3 / us:.1f};"
+                    f"pallas_interpret_allclose={ok}"))
+
+    # link contention (engine hotspot): XLA scan oracle vs blocked kernel
+    kk = 100_000 if quick else 400_000
+    chan = np.sort(rng.integers(0, 64, kk)).astype(np.int32)
+    arrive = rng.integers(0, 1 << 24, kk).astype(np.int32)
+    order = np.lexsort((arrive, chan))
+    chan, arrive = jnp.asarray(chan[order]), jnp.asarray(arrive[order])
+    ser = jnp.asarray(rng.integers(0, 1000, kk).astype(np.int32))
+    ref_fn = jax.jit(segmented_depart_ref)
+    ref, us = _time(ref_fn, chan, arrive, ser)
+    small_n = 4096
+    small = segmented_depart(chan[:small_n], arrive[:small_n], ser[:small_n],
+                             blk=1024, interpret=True)
+    ok = bool(np.array_equal(
+        np.asarray(small),
+        np.asarray(segmented_depart_ref(chan[:small_n], arrive[:small_n],
+                                        ser[:small_n]))))
+    rows.append(Row("kernels/link_contention", us,
+                    f"items_per_us={kk / us:.0f};pallas_interpret_exact={ok}"))
+    return rows

@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: row schema, timing, CSV emission.
+
+Every bench module exposes ``run(quick: bool) -> list[Row]``; ``benchmarks.run``
+aggregates and prints ``name,us_per_call,derived`` CSV (one row per measured
+quantity; ``derived`` carries the paper-comparison payload).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import dataclass
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def emit(rows: list[Row]) -> None:
+    for r in rows:
+        print(r.csv())
+        sys.stdout.flush()

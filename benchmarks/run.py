@@ -1,0 +1,64 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]``
+
+Prints ``name,us_per_call,derived`` CSV.  ``derived`` carries the reproduced
+quantity and the paper target it validates against (see DESIGN.md §7 for the
+experiment index).  Framework-level benches (fabric collective model, kernels,
+autotune) live alongside the paper-figure benches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = (
+    ("validation", "benchmarks.bench_validation"),
+    ("topology", "benchmarks.bench_topology"),
+    ("routing", "benchmarks.bench_routing"),
+    ("snoop_filter", "benchmarks.bench_snoop_filter"),
+    ("invblk", "benchmarks.bench_invblk"),
+    ("full_duplex", "benchmarks.bench_full_duplex"),
+    ("traces", "benchmarks.bench_traces"),
+    ("coherence_modes", "benchmarks.bench_coherence_modes"),
+    ("fabric", "benchmarks.bench_fabric"),
+    ("kernels", "benchmarks.bench_kernels"),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    import importlib
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for name, modname in MODULES:
+        if only and name not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+        except ImportError as e:  # pragma: no cover
+            print(f"{name}/import_error,0.0,{e}")
+            continue
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # pragma: no cover
+            print(f"{name}/run_error,0.0,{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(r.csv())
+            sys.stdout.flush()
+    print(f"total_wall_s,{time.time() - t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

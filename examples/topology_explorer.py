@@ -1,0 +1,75 @@
+"""ESF design-space exploration: sweep fabrics, policies and duplex modes.
+
+Reproduces the paper's §V exploration loop interactively:
+
+    PYTHONPATH=src python examples/topology_explorer.py
+"""
+
+import numpy as np
+
+import repro.core  # noqa: F401
+from repro.core import RequesterSpec, build_workload, request_stats
+from repro.core.engine import simulate
+from repro.core.routing import route_and_simulate
+from repro.core.snoop_filter import (CacheConfig, SFConfig, make_skewed_stream,
+                                     simulate_sf)
+from repro.core.topology import TOPOLOGY_BUILDERS, spine_leaf
+
+SCALE = 8  # requester/memory pairs
+
+
+def bandwidth_sweep():
+    print(f"== aggregated bandwidth, scale {2 * SCALE} (x port bw) ==")
+    for kind in TOPOLOGY_BUILDERS:
+        topo = (spine_leaf(SCALE, per_leaf=4) if kind == "spine_leaf"
+                else TOPOLOGY_BUILDERS[kind](SCALE))
+        g = topo.build()
+        mems = [int(m) for m in topo.memories()]
+        specs = [RequesterSpec(node=int(r), n_requests=80 * len(mems),
+                               targets=mems, issue_interval_ps=500, seed=i)
+                 for i, r in enumerate(topo.requesters())]
+        n_tx = sum(s.n_requests for s in specs)
+        rng = np.random.default_rng(7)
+        wl = build_workload(g, specs, header_bytes=64,
+                            route_choice=rng.integers(0, 1 << 20, n_tx))
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+        r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
+                          wl.measured)
+        print(f"  {kind:16s} {float(r['steady_bandwidth_MBps']) / 64_000:5.2f}x"
+              f"   mean latency {float(r['mean_latency_ps']) / 1000:6.0f} ns")
+
+
+def snoop_filter_sweep():
+    print("\n== DCOH victim policy sweep (skewed 90/10 stream) ==")
+    footprint, n = 2048, 8000
+    cap = int(0.2 * footprint)
+    addr, wr, rid = make_skewed_stream(n, footprint, seed=3)
+    base = None
+    for pol in ("fifo", "lru", "lfi", "lifo", "mru"):
+        res = simulate_sf(addr, wr, rid,
+                          SFConfig(capacity=cap, policy=pol,
+                                   footprint_lines=footprint),
+                          CacheConfig(capacity=cap))
+        bw = float(res.bandwidth_MBps)
+        base = base or bw
+        print(f"  {pol:5s} bandwidth {bw / base:5.2f}x fifo   "
+              f"BISnp {int(res.bisnp_events):6d}")
+
+
+def adaptive_routing_demo():
+    print("\n== routing strategies under noisy neighbours ==")
+    from benchmarks.bench_routing import run_strategy
+
+    for strat in ("oblivious", "ecmp", "adaptive"):
+        bw, lat = run_strategy(strat, 200, 250)
+        print(f"  {strat:10s} observed-host bw {bw:5.3f}x port, "
+              f"latency {lat:5.0f} ns")
+
+
+if __name__ == "__main__":
+    bandwidth_sweep()
+    snoop_filter_sweep()
+    try:
+        adaptive_routing_demo()
+    except ImportError:
+        print("(benchmarks package not on path — skip routing demo)")

@@ -1,0 +1,1 @@
+"""Checkpointing: atomic, hashed, async, elastic restore."""

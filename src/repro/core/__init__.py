@@ -1,0 +1,33 @@
+"""ESF core: the paper's contribution (interconnect layer + device layer).
+
+The schedule engine does exact integer arithmetic in picoseconds, so importing
+``repro.core`` enables JAX 64-bit mode.  All model/framework code elsewhere in
+this repo is dtype-explicit (bf16/f32/int32), so enabling x64 is safe and does
+not change compiled training/serving programs (verified by the dry-run tests).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import topology, engine, devices  # noqa: E402,F401
+from .topology import (  # noqa: E402,F401
+    REQUESTER, SWITCH, MEMORY,
+    Topology, LinkSpec, EndpointSpec, FabricGraph,
+    chain, tree, ring, spine_leaf, fully_connected, single_bus,
+    TOPOLOGY_BUILDERS,
+)
+from .engine import (  # noqa: E402,F401
+    Channels, Hops, Schedule, simulate, simulate_auto, channel_stats, request_stats,
+    make_channels, ser_ps,
+)
+from .devices import RequesterSpec, Workload, build_workload  # noqa: E402,F401
+from . import calibration, traces, routing, snoop_filter  # noqa: E402,F401
+from .snoop_filter import (  # noqa: E402,F401
+    SFConfig, CacheConfig, simulate_sf, POLICIES,
+    make_skewed_stream, make_sequential_stream,
+)
+from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
+from . import fabric_model, autotune, vcs  # noqa: E402,F401
+from .fabric_model import TPUFabric, predict_collective  # noqa: E402,F401
+from .autotune import WorkloadDims, Layout, autotune as autotune_layouts  # noqa: E402,F401

@@ -1,0 +1,235 @@
+"""Device layer: computational components (requesters) and workload building.
+
+ESF's computational component (§III-B) has three units:
+
+  * request queue — issue capability, modeled by an inter-issue interval
+    (open-loop intensity control; the loaded-latency knob of §IV),
+  * address translation unit — interleaving policy across memory endpoints,
+  * cache-coherence management unit — collaborates with the DCOH; handled in
+    `core.snoop_filter` and composed with this layer by the benches.
+
+``build_workload`` turns a set of RequesterSpecs into the dense hop tables the
+engine consumes: for each access it resolves the route (default shortest-path
+from the interconnect layer, or one of the equal-cost alternatives under the
+adaptive strategy), then emits request hops, the endpoint service hop, and
+response hops.
+
+Packetization (header model, paper §V-D): a read sends a header-sized request
+packet toward the endpoint and a payload-sized response back; a write sends
+the payload toward the endpoint and a header-sized completion back.  This is
+the model under which single-type traffic leaves one full-duplex direction to
+headers only (utility 1/2 at zero header overhead) and a 1:1 mix doubles
+bandwidth — and under which the gain vanishes exactly when header == payload,
+matching Fig. 16/17.  A "symmetric" variant (headers on every packet) is also
+provided for sensitivity runs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import FabricGraph, SWITCH
+from .engine import Channels, Hops, make_channels
+
+HEADER_MODELS = ("esf", "symmetric")
+
+
+@dataclass
+class RequesterSpec:
+    """One requester's traffic program (open loop)."""
+
+    node: int
+    n_requests: int
+    targets: Sequence[int]
+    pattern: str = "uniform"        # uniform | stream | skewed | trace
+    read_ratio: float = 1.0
+    issue_interval_ps: int = 10_000
+    start_ps: int = 0
+    payload_bytes: int = 64
+    seed: int = 0
+    # skewed pattern: hot fraction of footprint getting hot_ratio of accesses
+    footprint_lines: int = 4096
+    hot_frac: float = 0.1
+    hot_ratio: float = 0.9
+    issue_jitter: str = "none"      # "none" | "exp" (Poisson arrivals)
+    # trace replay (ESF trace-based mode): overrides pattern when set
+    trace_addr: np.ndarray | None = None
+    trace_is_write: np.ndarray | None = None
+    trace_interval_ps: np.ndarray | None = None
+
+
+@dataclass
+class Workload:
+    hops: Hops
+    channels: Channels
+    issue_ps: jnp.ndarray
+    payload_bytes: jnp.ndarray
+    measured: jnp.ndarray
+    requester: np.ndarray       # (N,) requester node per transaction
+    target: np.ndarray          # (N,) memory node per transaction
+    is_write: np.ndarray
+    n_link_hops: np.ndarray     # (N,) link hops one way (for Fig. 11 grouping)
+    route_alt: np.ndarray       # (N,) which equal-cost alternative was taken
+
+
+def _gen_addresses(spec: RequesterSpec, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    n = spec.n_requests
+    if spec.trace_addr is not None:
+        addr = np.asarray(spec.trace_addr[:n], dtype=np.int64)
+        wr = np.asarray(spec.trace_is_write[:n], dtype=bool)
+        iv = (np.asarray(spec.trace_interval_ps[:n], dtype=np.int64)
+              if spec.trace_interval_ps is not None
+              else np.full(n, spec.issue_interval_ps, np.int64))
+        return addr, wr, iv
+    if spec.pattern == "stream":
+        addr = np.arange(n, dtype=np.int64) % spec.footprint_lines
+    elif spec.pattern == "skewed":
+        hot_n = max(int(spec.footprint_lines * spec.hot_frac), 1)
+        is_hot = rng.random(n) < spec.hot_ratio
+        addr = np.where(
+            is_hot,
+            rng.integers(0, hot_n, n),
+            hot_n + rng.integers(0, max(spec.footprint_lines - hot_n, 1), n),
+        ).astype(np.int64)
+    else:  # uniform
+        addr = rng.integers(0, spec.footprint_lines, n).astype(np.int64)
+    wr = rng.random(n) >= spec.read_ratio
+    if spec.issue_jitter == "exp":
+        iv = np.maximum(rng.exponential(spec.issue_interval_ps, n), 1).astype(np.int64)
+    else:
+        iv = np.full(n, spec.issue_interval_ps, np.int64)
+    return addr, wr, iv
+
+
+def _interleave(addr: np.ndarray, targets: Sequence[int], policy: str) -> np.ndarray:
+    """Address translation unit: map line address -> endpoint (§III-B)."""
+    t = np.asarray(targets, dtype=np.int64)
+    if policy == "line":          # fine-grained line interleaving
+        return t[addr % len(t)]
+    if policy == "block":         # contiguous block per endpoint
+        return t[(addr * len(t)) // max(int(addr.max()) + 1, 1) % len(t)]
+    raise ValueError(f"unknown interleave policy {policy!r}")
+
+
+def build_workload(
+    graph: FabricGraph,
+    specs: Sequence[RequesterSpec],
+    header_bytes: int = 64,
+    header_model: str = "esf",
+    interleave: str = "line",
+    warmup_frac: float = 0.5,
+    route_choice: np.ndarray | None = None,
+    requester_overhead_ps: int = 22_000,   # Table III: 10 ns process + 12 ns cache
+) -> Workload:
+    """Expand requester traffic programs into engine hop tables.
+
+    ``route_choice`` (optional, per-transaction int) selects among equal-cost
+    route alternatives — the hook the adaptive routing strategy uses
+    (see `core.routing.adaptive_schedule`).
+    """
+    assert header_model in HEADER_MODELS
+    ep = graph.topo.endpoint
+
+    rows: list[dict] = []
+    tx = 0
+    for spec in specs:
+        rng = np.random.default_rng(spec.seed + 7919 * spec.node)
+        addr, wr, iv = _gen_addresses(spec, rng)
+        tgt = _interleave(addr, spec.targets, interleave)
+        t = spec.start_ps + np.cumsum(iv) - iv[0]
+        for i in range(spec.n_requests):
+            rows.append(dict(
+                req=spec.node, mem=int(tgt[i]), write=bool(wr[i]),
+                addr=int(addr[i]), issue=int(t[i]) + requester_overhead_ps,
+                payload=spec.payload_bytes, idx=tx, ntgt=len(spec.targets),
+                measured=i >= int(spec.n_requests * warmup_frac),
+            ))
+            tx += 1
+
+    n = len(rows)
+    # resolve routes; longest path defines padding
+    paths = []
+    alts = np.zeros(n, dtype=np.int64)
+    for j, r in enumerate(rows):
+        alt = int(route_choice[j]) if route_choice is not None else 0
+        alts[j] = alt % graph.n_route_alternatives(r["req"], r["mem"])
+        paths.append(graph.route(r["req"], r["mem"], alt=alt))
+    max_links = max(len(p) - 1 for p in paths)
+    h = 2 * max_links + 1  # request hops + service + response hops
+
+    channel = np.full((n, h), -1, dtype=np.int32)
+    nbytes = np.zeros((n, h), dtype=np.int64)
+    direction = np.zeros((n, h), dtype=np.int8)
+    row_id = np.full((n, h), -1, dtype=np.int32)
+    fixed_after = np.zeros((n, h), dtype=np.int64)
+    is_payload = np.zeros((n, h), dtype=bool)
+    valid = np.zeros((n, h), dtype=bool)
+
+    sw_ps = graph.topo.switching_ps
+    for j, (r, path) in enumerate(zip(rows, paths)):
+        write = r["write"]
+        pay = r["payload"]
+        if header_model == "esf":
+            fwd_b = pay if write else header_bytes
+            bwd_b = header_bytes if write else pay
+            fwd_pay, bwd_pay = write, not write
+        else:  # symmetric: header on every packet, payload rides with data
+            fwd_b = header_bytes + (pay if write else 0)
+            bwd_b = header_bytes + (0 if write else pay)
+            fwd_pay, bwd_pay = write, not write
+        k = 0
+        for u, v in zip(path[:-1], path[1:]):
+            c, d = graph.edge_channel(u, v)
+            channel[j, k] = c
+            nbytes[j, k] = fwd_b
+            direction[j, k] = d
+            fixed_after[j, k] = graph.chan_fixed_ps[c] + (sw_ps if graph.topo.kinds[v] == SWITCH else 0)
+            is_payload[j, k] = fwd_pay
+            valid[j, k] = True
+            k += 1
+        # endpoint service hop (banked; row-buffer state carried per bank).
+        # The line-interleave across endpoints consumes the low addr bits, so
+        # bank/row derive from the per-endpoint line index (addr // n_targets)
+        # — otherwise every request to an endpoint would land in one bank.
+        ep_line = r["addr"] // max(r["ntgt"], 1)
+        bank = ep_line % ep.banks
+        c = graph.service_channel(r["mem"], bank)
+        channel[j, k] = c
+        nbytes[j, k] = pay
+        row_id[j, k] = (ep_line // ep.lines_per_row) % (1 << 30)
+        fixed_after[j, k] = ep.fixed_ps
+        is_payload[j, k] = True
+        valid[j, k] = True
+        k += 1
+        for u, v in zip(path[::-1][:-1], path[::-1][1:]):
+            c, d = graph.edge_channel(u, v)
+            channel[j, k] = c
+            nbytes[j, k] = bwd_b
+            direction[j, k] = d
+            fixed_after[j, k] = graph.chan_fixed_ps[c] + (sw_ps if graph.topo.kinds[v] == SWITCH else 0)
+            is_payload[j, k] = bwd_pay
+            valid[j, k] = True
+            k += 1
+
+    hops = Hops(
+        channel=jnp.asarray(channel), nbytes=jnp.asarray(nbytes),
+        direction=jnp.asarray(direction), row=jnp.asarray(row_id),
+        fixed_after_ps=jnp.asarray(fixed_after),
+        is_payload=jnp.asarray(is_payload), valid=jnp.asarray(valid),
+    )
+    return Workload(
+        hops=hops,
+        channels=make_channels(graph, ep.row_hit_extra_ps, ep.row_miss_extra_ps),
+        issue_ps=jnp.asarray(np.array([r["issue"] for r in rows], np.int64)),
+        payload_bytes=jnp.asarray(np.array([r["payload"] for r in rows], np.int64)),
+        measured=jnp.asarray(np.array([r["measured"] for r in rows], bool)),
+        requester=np.array([r["req"] for r in rows], np.int64),
+        target=np.array([r["mem"] for r in rows], np.int64),
+        is_write=np.array([r["write"] for r in rows], bool),
+        n_link_hops=np.array([len(p) - 1 for p in paths], np.int64),
+        route_alt=alts,
+    )

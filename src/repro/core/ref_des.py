@@ -1,0 +1,118 @@
+"""Pure-Python event-driven reference simulator (oracle for `core.engine`).
+
+This is, structurally, the C++ ESF: a classic discrete-event loop over channel
+queues with FCFS-by-arrival arbitration.  It exists solely to prove that the
+tensorized fixpoint engine computes the *exact* same integer schedule; the
+test suite runs both on randomized topologies/workloads and asserts equality.
+
+Semantics (must match `core.engine.simulate` bit-for-bit):
+  * per channel, items are served in order of (arrival time, flat item index);
+  * service time = bytes * 1e12 // (bw_MBps * 1e6)  [integer picoseconds];
+  * half-duplex: when the served item's direction differs from the previous
+    item's on that channel, the channel frees `turnaround_ps` later;
+  * row-managed channels (DRAM banks) add row_hit/row_miss extra occupancy
+    depending on the previously accessed row (cold access counts as miss);
+  * arrival at hop h+1 = departure at hop h + fixed_after[h].
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .engine import Channels, Hops
+
+
+def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
+    chan = np.asarray(hops.channel)
+    nbytes = np.asarray(hops.nbytes)
+    direction = np.asarray(hops.direction)
+    row = np.asarray(hops.row)
+    fixed = np.asarray(hops.fixed_after_ps)
+    valid = np.asarray(hops.valid)
+    issue = np.asarray(issue_ps)
+    bw = np.asarray(channels.bw_MBps)
+    turn = np.asarray(channels.turnaround_ps)
+    rhit = np.asarray(channels.row_hit_ps)
+    rmiss = np.asarray(channels.row_miss_ps)
+
+    n, h = chan.shape
+    arrive = np.zeros((n, h + 1), dtype=np.int64)
+    start = np.zeros((n, h), dtype=np.int64)
+    depart = np.zeros((n, h), dtype=np.int64)
+
+    # channel state
+    free_at = {}      # channel -> (time, last_dir, last_row)
+    queues = {}       # channel -> heap of (arrival, flat_idx, pkt, hop)
+
+    # event heap: (time, seq, kind, payload)  kind 0=arrival at hop, 1=channel free
+    ev = []
+    seq = 0
+    for p in range(n):
+        arrive[p, 0] = issue[p]
+        heapq.heappush(ev, (int(issue[p]), seq, 0, (p, 0)))
+        seq += 1
+
+    def try_serve(c, now):
+        nonlocal seq
+        q = queues.get(c)
+        if not q:
+            return
+        t_free, last_dir, last_row = free_at.get(c, (0, -1, -2))
+        if t_free > now:
+            return
+        # FCFS by (arrival, flat index); only items that have arrived
+        arr, fi, p, hop = q[0]
+        if arr > now:
+            heapq.heappush(ev, (int(arr), seq, 1, c)); seq += 1
+            return
+        heapq.heappop(q)
+        gap = int(turn[c]) if (last_dir != -1 and direction[p, hop] != last_dir) else 0
+        st = max(arr, t_free + gap)
+        if gap and st < t_free + gap:
+            st = t_free + gap
+        ser = (int(nbytes[p, hop]) * 1_000_000) // int(bw[c])
+        extra = 0
+        r = int(row[p, hop])
+        if r >= 0:
+            extra = int(rhit[c]) if r == last_row else int(rmiss[c])
+        dp = st + ser + extra
+        start[p, hop] = st
+        depart[p, hop] = dp
+        free_at[c] = (dp, int(direction[p, hop]), r if r >= 0 else last_row)
+        arrive[p, hop + 1] = dp + int(fixed[p, hop])
+        heapq.heappush(ev, (int(arrive[p, hop + 1]), seq, 0, (p, hop + 1))); seq += 1
+        heapq.heappush(ev, (dp, seq, 1, c)); seq += 1
+
+    while ev:
+        now, _, kind, payload = heapq.heappop(ev)
+        if kind == 0:
+            p, hop = payload
+            # skip padded hops and zero-byte packets: the latter ride a side
+            # channel (command path) — instant pass-through, no bus occupancy,
+            # no direction turn (mirror of the engine semantics)
+            while hop < h and (not valid[p, hop] or nbytes[p, hop] == 0):
+                start[p, hop] = arrive[p, hop]
+                depart[p, hop] = arrive[p, hop]
+                arrive[p, hop + 1] = arrive[p, hop] + (
+                    int(fixed[p, hop]) if valid[p, hop] else 0
+                )
+                hop += 1
+            if hop >= h:
+                continue
+            c = int(chan[p, hop])
+            queues.setdefault(c, [])
+            heapq.heappush(queues[c], (int(arrive[p, hop]), p * h + hop, p, hop))
+            try_serve(c, now)
+        else:
+            if isinstance(payload, tuple):
+                continue
+            try_serve(payload, now)
+
+    return {
+        "arrive": arrive,
+        "start": start,
+        "depart": depart,
+        "complete": arrive[:, h],
+    }

@@ -1,0 +1,108 @@
+"""Routing strategies over the PBR fabric (paper §V-A, Fig. 13).
+
+Oblivious routing fixes each packet's path statically from (source,
+destination) — the interconnect layer's default shortest path (alternative 0),
+or hash-spread over the equal-cost set (ECMP flavour).  Adaptive routing picks
+among equal-cost alternatives by congestion.  ESF switches adapt hop-by-hop;
+here adaptation is expressed as fixpoint route re-selection: simulate, measure
+per-channel busy time, re-route every transaction onto its least-loaded
+equal-cost alternative, and repeat until the assignment stabilizes.  This is
+the same control loop a PBR switch's adaptive arbiter converges to in steady
+state, reformulated to keep the data plane tensorized.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .devices import RequesterSpec, Workload, build_workload
+from .engine import channel_stats, simulate
+from .topology import FabricGraph
+
+STRATEGIES = ("oblivious", "ecmp", "adaptive")
+
+
+def _route_channels(graph: FabricGraph, src: int, dst: int, alt: int) -> list[int]:
+    path = graph.route(src, dst, alt=alt)
+    chans = []
+    for u, v in zip(path[:-1], path[1:]):
+        chans.append(graph.edge_channel(u, v)[0])
+    for u, v in zip(path[::-1][:-1], path[::-1][1:]):
+        chans.append(graph.edge_channel(u, v)[0])
+    return chans
+
+
+def route_and_simulate(graph: FabricGraph, specs, strategy: str = "oblivious",
+                       adapt_iters: int = 4, seed: int = 0, **build_kw):
+    """Build + schedule a workload under the given routing strategy.
+
+    Returns (workload, schedule, per-channel stats dict).
+    """
+    assert strategy in STRATEGIES
+    rng = np.random.default_rng(seed)
+
+    wl = build_workload(graph, specs, **build_kw)
+    n = wl.hops.channel.shape[0]
+
+    if strategy == "oblivious":
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps)
+        return wl, sched, channel_stats(wl.hops, sched, wl.channels)
+
+    # alternative-route universe per transaction
+    n_alts = np.array([
+        graph.n_route_alternatives(int(s), int(d))
+        for s, d in zip(wl.requester, wl.target)
+    ])
+    if strategy == "ecmp":
+        choice = rng.integers(0, 1 << 30, n) % n_alts
+        wl = build_workload(graph, specs, route_choice=choice, **build_kw)
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps)
+        return wl, sched, channel_stats(wl.hops, sched, wl.channels)
+
+    # adaptive: incremental greedy congestion balancing.  A synchronous
+    # everyone-flips update oscillates between spines (herd behaviour), so we
+    # re-assign transactions one at a time against a live per-channel load
+    # estimate — the steady state a per-packet adaptive arbiter converges to.
+    alt_chans = {}
+    for s, d in set(zip(wl.requester.tolist(), wl.target.tolist())):
+        for a in range(graph.n_route_alternatives(s, d)):
+            alt_chans[(s, d, a)] = _route_channels(graph, s, d, a)
+
+    bw = np.asarray(wl.channels.bw_MBps, dtype=np.float64)
+    load = np.zeros(graph.n_channels)
+    contrib = 64.0 * 1e6 / np.maximum(bw, 1)  # ~per-packet channel time
+
+    choice = np.zeros(n, dtype=np.int64)
+    for j in range(n):  # initial: least-loaded insertion
+        s, d = int(wl.requester[j]), int(wl.target[j])
+        k = graph.n_route_alternatives(s, d)
+        if k > 1:
+            costs = [(load[alt_chans[(s, d, a)]]
+                      * contrib[alt_chans[(s, d, a)]]).sum() for a in range(k)]
+            choice[j] = int(np.argmin(costs))
+        load[alt_chans[(s, d, int(choice[j]))]] += 1
+
+    sched = stats = None
+    for _ in range(adapt_iters):
+        wl = build_workload(graph, specs, route_choice=choice, **build_kw)
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps)
+        stats = channel_stats(wl.hops, sched, wl.channels)
+        busy = np.asarray(stats["busy_ps"]).astype(np.float64)
+        changed = 0
+        order = rng.permutation(n)
+        for j in order:
+            s, d = int(wl.requester[j]), int(wl.target[j])
+            k = graph.n_route_alternatives(s, d)
+            if k <= 1:
+                continue
+            cur = int(choice[j])
+            busy[alt_chans[(s, d, cur)]] -= contrib[alt_chans[(s, d, cur)]] * 1e6
+            costs = [busy[alt_chans[(s, d, a)]].sum() for a in range(k)]
+            new = int(np.argmin(costs))
+            busy[alt_chans[(s, d, new)]] += contrib[alt_chans[(s, d, new)]] * 1e6
+            if new != cur:
+                choice[j] = new
+                changed += 1
+        if changed == 0:
+            break
+    return wl, sched, stats

@@ -1,0 +1,338 @@
+"""Device coherency agent (DCOH): device-side inclusive snoop filter.
+
+ESF §III-D: devices with device-managed coherence (HDM-DB mode) carry a DCOH;
+the reference implementation is an *inclusive* snoop filter (SF) — a fully
+associative buffer recording every cacheline of the device's HDM that any
+requester currently caches, with coherence state + owner list per entry.  When
+an entry must be cleared (conflict or capacity victim), the SF sends
+Back-Invalidate Snoops (BISnp) to the owners and waits for BIRsp before
+serving the new request.  Victim selection is modularized (paper §V-B studies
+FIFO/LRU/LFI/LIFO/MRU; §V-C adds block-length-prioritized selection driving
+InvBlk commands that clear up to 4 address-contiguous entries per BISnp).
+
+Tensorization: the protocol is inherently sequential, so it runs as a
+``lax.scan`` over the request stream; per-step state (requester cache tags,
+SF tags/owners/metadata, the LFI global insert-count table, an address
+presence bitmap for InvBlk run detection) is dense and fixed-shape.  The whole
+sweep over victim policies jits once per policy and runs in milliseconds —
+and coherence invariants (inclusivity, owner consistency) are checked by
+property tests over the traced state history.
+
+Timing model (closed loop, per paper §V-B setup): the requester's local cache
+filters hits; a miss pays the link round trip + device controller + SF
+processing; any required BISnp adds a BISnp round trip (plus per-extra-line
+cache access cost and bus occupancy for InvBlk flows).  The §V-B bus is
+configured with infinite bandwidth (transfer_ps=0) to isolate SF behaviour,
+exactly as in the paper; the §V-C InvBlk study uses a finite bus.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+POLICIES = ("fifo", "lru", "lfi", "lifo", "mru", "blp")
+
+_BIG = jnp.int64(1) << 40
+_SMALL = jnp.int64(1) << 36
+
+
+@dataclass(frozen=True)
+class SFConfig:
+    capacity: int
+    policy: str = "fifo"
+    invblk_max: int = 1            # 1 = plain BISnp; 2..4 = InvBlk lengths
+    footprint_lines: int = 4096
+    # timing (picoseconds)
+    t_cache_ps: int = 12_000       # Table III cache access
+    t_sf_ps: int = 12_000          # SF lookup/update
+    miss_path_ps: int = 122_000    # link RTT + controller + DRAM on a miss
+    bisnp_rtt_ps: int = 64_000     # BISnp/BIRsp round trip
+    writeback_ps: int = 15_000     # dirty flush to endpoint
+    probe_conflict_ps: int = 6_000  # DCOH response-assembly serialization per
+    # extra InvBlk line beyond the first pair (owner cache probes and BIRsp
+    # collection serialize; grows superlinearly with block length, §V-C)
+    line_bytes: int = 64
+    bus_MBps: int = 0              # 0 = infinite bus (paper §V-B isolation)
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    capacity: int
+    t_cache_ps: int = 12_000
+
+
+class SFResult(NamedTuple):
+    latency_ps: jnp.ndarray       # (T,) per-request latency
+    cache_hit: jnp.ndarray        # (T,) bool
+    bisnp_events: jnp.ndarray     # () total BISnp requests sent
+    invalidated_lines: jnp.ndarray  # () total lines invalidated
+    total_time_ps: jnp.ndarray    # () max requester clock
+    bandwidth_MBps: jnp.ndarray   # () delivered line bytes / total time
+    # traced state history for invariant property tests (sampled per step):
+    owner_lines: jnp.ndarray      # (T,) lines owned in SF by requester 0
+    cached_lines: jnp.ndarray     # (T,) lines present in requester 0 cache
+    # final protocol state (for inclusivity/owner-consistency checks):
+    final_sf_tag: jnp.ndarray     # (Cs,)
+    final_sf_owner: jnp.ndarray   # (Cs,)
+    final_cache_tag: jnp.ndarray  # (R, Cc)
+
+
+def _victim_scores(policy: str, sf_tag, sf_ins, sf_acc, lfi_count, runlen):
+    """Lower score = better victim.  Invalid entries are excluded by caller."""
+    if policy == "fifo":
+        return sf_ins
+    if policy == "lifo":
+        return -sf_ins
+    if policy == "lru":
+        return sf_acc
+    if policy == "mru":
+        return -sf_acc
+    if policy == "lfi":
+        # least frequently inserted address; ties broken LIFO
+        cnt = lfi_count[jnp.clip(sf_tag, 0, lfi_count.shape[0] - 1)]
+        return cnt.astype(jnp.int64) * _BIG + (_SMALL - sf_ins)
+    if policy == "blp":
+        # block-length-prioritized: longest contiguous run, ties broken LIFO
+        return -(runlen.astype(jnp.int64) * _BIG + sf_ins)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("sf_cfg", "cache_cfg", "n_requesters"))
+def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
+                sf_cfg: SFConfig, cache_cfg: CacheConfig,
+                n_requesters: int = 1) -> SFResult:
+    """Run the DCOH protocol over a merged request stream.
+
+    addr      (T,) int32 line addresses in [0, footprint)
+    is_write  (T,) bool
+    req_id    (T,) int32 in [0, n_requesters)
+    """
+    T = addr.shape[0]
+    R, Cc, Cs = n_requesters, cache_cfg.capacity, sf_cfg.capacity
+    F = sf_cfg.footprint_lines
+
+    transfer_ps = (
+        0 if sf_cfg.bus_MBps == 0
+        else (sf_cfg.line_bytes * 1_000_000_000_000) // (sf_cfg.bus_MBps * 1_000_000)
+    )
+
+    class S(NamedTuple):
+        cache_tag: jnp.ndarray   # (R, Cc) int32, -1 empty
+        cache_seq: jnp.ndarray   # (R, Cc) int64 LRU stamps
+        sf_tag: jnp.ndarray      # (Cs,) int32, -1 empty
+        sf_owner: jnp.ndarray    # (Cs,) int32 bitmask
+        sf_dirty: jnp.ndarray    # (Cs,) bool
+        sf_ins: jnp.ndarray      # (Cs,) int64 insertion stamps
+        sf_acc: jnp.ndarray      # (Cs,) int64 access stamps
+        lfi_count: jnp.ndarray   # (F,) int32 per-address insert counts
+        present: jnp.ndarray     # (F,) bool SF presence bitmap
+        clock: jnp.ndarray       # (R,) int64 per-requester time
+        bus_free: jnp.ndarray    # () int64
+        seq: jnp.ndarray         # () int64
+        bisnp: jnp.ndarray       # () int64
+        inval: jnp.ndarray       # () int64
+
+    init = S(
+        cache_tag=jnp.full((R, Cc), -1, jnp.int32),
+        cache_seq=jnp.zeros((R, Cc), jnp.int64),
+        sf_tag=jnp.full((Cs,), -1, jnp.int32),
+        sf_owner=jnp.zeros((Cs,), jnp.int32),
+        sf_dirty=jnp.zeros((Cs,), bool),
+        sf_ins=jnp.zeros((Cs,), jnp.int64),
+        sf_acc=jnp.zeros((Cs,), jnp.int64),
+        lfi_count=jnp.zeros((F,), jnp.int32),
+        present=jnp.zeros((F,), bool),
+        clock=jnp.zeros((R,), jnp.int64),
+        bus_free=jnp.int64(0),
+        seq=jnp.int64(1),
+        bisnp=jnp.int64(0),
+        inval=jnp.int64(0),
+    )
+
+    maxlen = max(int(sf_cfg.invblk_max), 1)
+
+    def step(s: S, x):
+        a, w, r = x
+        t = s.clock[r]
+        rbit = jnp.int32(1) << r
+
+        # ---- requester local cache -------------------------------------
+        cline = s.cache_tag[r] == a
+        chit = jnp.any(cline)
+        lat_hit = jnp.int64(cache_cfg.t_cache_ps)
+
+        # ---- miss path: bus + controller + SF ---------------------------
+        t_bus_ready = jnp.maximum(t + lat_hit, s.bus_free)
+        sline = s.sf_tag == a
+        sf_hit = jnp.any(sline)
+
+        # conflict: write while other requesters own the line
+        owners_a = jnp.sum(jnp.where(sline, s.sf_owner, 0)).astype(jnp.int32)
+        others = owners_a & ~rbit
+        conflict = sf_hit & w & (others != 0)
+
+        # capacity: SF full and no entry for a
+        sf_valid = s.sf_tag >= 0
+        sf_full = jnp.all(sf_valid)
+        need_victim = (~sf_hit) & sf_full
+
+        # ---- victim selection (policy) ----------------------------------
+        run = jnp.ones((Cs,), jnp.int32)
+        for d in range(1, maxlen):
+            nxt = jnp.clip(s.sf_tag + d, 0, F - 1)
+            step_ok = (run == d) & s.present[nxt] & ((s.sf_tag + d) < F)
+            run = run + step_ok.astype(jnp.int32)
+        scores = _victim_scores(sf_cfg.policy, s.sf_tag, s.sf_ins, s.sf_acc,
+                                s.lfi_count, run)
+        scores = jnp.where(sf_valid, scores, jnp.int64(1) << 60)
+        victim = jnp.argmin(scores)
+        v_tag = s.sf_tag[victim]
+        v_len = jnp.minimum(run[victim], maxlen)
+
+        # lines cleared by the (Inv)Blk BISnp: v_tag .. v_tag+v_len-1
+        offs = jnp.arange(maxlen, dtype=jnp.int32)
+        blk_addrs = v_tag + offs
+        blk_live = (offs < v_len) & need_victim
+        clear_entry = need_victim & jnp.isin(s.sf_tag, jnp.where(blk_live, blk_addrs, -7))
+        n_clear = jnp.sum(clear_entry)
+        any_dirty = jnp.any(clear_entry & s.sf_dirty)
+
+        # BISnp also invalidates the lines in the owners' caches (the feedback
+        # that makes FIFO/LRU victimization of hot lines expensive, Fig. 14)
+        cleared_tags = jnp.where(clear_entry, s.sf_tag, -7)
+        cache_inval = jnp.isin(s.cache_tag, cleared_tags) & (s.cache_tag >= 0)
+        # conflict BISnp invalidates line a in other requesters' caches
+        mask_others = (jnp.arange(R)[:, None] != r) & conflict
+        cache_inval = cache_inval | ((s.cache_tag == a) & mask_others)
+
+        do_bisnp = need_victim | conflict
+        lat_bisnp = jnp.where(do_bisnp, sf_cfg.bisnp_rtt_ps, 0)
+        extra = jnp.maximum(v_len - 1, 0).astype(jnp.int64)
+        lat_bisnp += jnp.where(
+            need_victim,
+            extra * sf_cfg.t_cache_ps + extra * extra * sf_cfg.probe_conflict_ps,
+            0,
+        )
+        n_dirty = jnp.sum(clear_entry & s.sf_dirty)
+        lat_wb = jnp.where(any_dirty, n_dirty * sf_cfg.writeback_ps, 0)
+
+        # bus occupancy: miss transfer + InvBlk flush data competes (Fig. 15)
+        bus_occupancy = transfer_ps * (1 + jnp.where(need_victim, v_len, 0))
+        lat_bus = (t_bus_ready - (t + lat_hit)) + transfer_ps
+
+        lat_miss = (lat_hit + lat_bus + sf_cfg.miss_path_ps + sf_cfg.t_sf_ps
+                    + lat_bisnp + lat_wb)
+        latency = jnp.where(chit, lat_hit, lat_miss)
+
+        # ---- state updates ----------------------------------------------
+        seq = s.seq
+        # cache: on hit refresh LRU; on miss allocate LRU victim slot
+        cache_tag = jnp.where(cache_inval, -1, s.cache_tag)
+        cache_seq = jnp.where(cache_inval, 0, s.cache_seq)
+        row_tag, row_seq = cache_tag[r], cache_seq[r]
+        hit_slot = jnp.argmax(row_tag == a)
+        empty = row_tag < 0
+        fill_slot = jnp.where(jnp.any(empty), jnp.argmax(empty), jnp.argmin(row_seq))
+        slot = jnp.where(chit, hit_slot, fill_slot)
+        row_tag = row_tag.at[slot].set(a)
+        row_seq = row_seq.at[slot].set(seq)
+        cache_tag = cache_tag.at[r].set(row_tag)
+        cache_seq = cache_seq.at[r].set(row_seq)
+
+        # SF: clear victims, then upsert entry for a (only on cache miss —
+        # hits are filtered by the local cache and never reach the device)
+        upsert = ~chit
+        sf_tag = jnp.where(clear_entry, -1, s.sf_tag)
+        sf_owner = jnp.where(clear_entry, 0, s.sf_owner)
+        sf_dirty = jnp.where(clear_entry, False, s.sf_dirty)
+        sf_ins = jnp.where(clear_entry, 0, s.sf_ins)
+        sf_acc = jnp.where(clear_entry, 0, s.sf_acc)
+        sf_owner = jnp.where((s.sf_tag == a) & conflict, rbit, sf_owner)
+
+        entry_live = sf_tag == a
+        have_entry = jnp.any(entry_live)
+        free = sf_tag < 0
+        new_slot = jnp.argmax(free)  # guaranteed free after clearing victims
+        tgt = jnp.where(have_entry, jnp.argmax(entry_live), new_slot)
+        sf_tag = jnp.where(upsert, sf_tag.at[tgt].set(a), sf_tag)
+        sf_owner = jnp.where(upsert, sf_owner.at[tgt].set(sf_owner[tgt] | rbit), sf_owner)
+        sf_dirty = jnp.where(upsert, sf_dirty.at[tgt].set(sf_dirty[tgt] | w), sf_dirty)
+        sf_ins = jnp.where(upsert & ~have_entry, sf_ins.at[tgt].set(seq), sf_ins)
+        sf_acc = jnp.where(upsert, sf_acc.at[tgt].set(seq), sf_acc)
+
+        present = s.present
+        blk_idx = jnp.clip(blk_addrs, 0, F - 1)
+        present = present.at[blk_idx].set(present[blk_idx] & ~blk_live)
+        present = jnp.where(upsert, present.at[a].set(True), present)
+        lfi_count = jnp.where(
+            upsert & ~have_entry, s.lfi_count.at[a].add(1), s.lfi_count
+        )
+
+        new = S(
+            cache_tag=cache_tag, cache_seq=cache_seq,
+            sf_tag=sf_tag, sf_owner=sf_owner, sf_dirty=sf_dirty,
+            sf_ins=sf_ins, sf_acc=sf_acc,
+            lfi_count=lfi_count, present=present,
+            clock=s.clock.at[r].set(t + latency),
+            bus_free=jnp.where(chit, s.bus_free, t_bus_ready + bus_occupancy),
+            seq=seq + 1,
+            bisnp=s.bisnp + do_bisnp,
+            inval=s.inval + jnp.where(need_victim, n_clear, 0) + conflict,
+        )
+        out = (
+            latency, chit,
+            jnp.sum((sf_owner_bit := (new.sf_owner & 1) > 0) & (new.sf_tag >= 0)),
+            jnp.sum(new.cache_tag[0] >= 0),
+        )
+        return new, out
+
+    final, (lat, chit, owner0, cached0) = jax.lax.scan(
+        step, init, (addr.astype(jnp.int32), is_write, req_id.astype(jnp.int32))
+    )
+    total = jnp.max(final.clock)
+    bw = (T * sf_cfg.line_bytes * jnp.int64(1_000_000_000_000)
+          // jnp.maximum(total, 1) // 1_000_000)
+    return SFResult(
+        latency_ps=lat, cache_hit=chit,
+        bisnp_events=final.bisnp, invalidated_lines=final.inval,
+        total_time_ps=total, bandwidth_MBps=bw,
+        owner_lines=owner0, cached_lines=cached0,
+        final_sf_tag=final.sf_tag, final_sf_owner=final.sf_owner,
+        final_cache_tag=final.cache_tag,
+    )
+
+
+def make_skewed_stream(n: int, footprint: int, hot_frac: float = 0.1,
+                       hot_ratio: float = 0.9, write_ratio: float = 0.0,
+                       n_requesters: int = 1, seed: int = 0):
+    """Paper §V-B request pattern: 90% of accesses to the hot 10% of lines."""
+    rng = np.random.default_rng(seed)
+    hot_n = max(int(footprint * hot_frac), 1)
+    is_hot = rng.random(n) < hot_ratio
+    addr = np.where(is_hot, rng.integers(0, hot_n, n),
+                    hot_n + rng.integers(0, footprint - hot_n, n)).astype(np.int32)
+    wr = rng.random(n) < write_ratio
+    rid = (np.arange(n) % n_requesters).astype(np.int32)
+    return jnp.asarray(addr), jnp.asarray(wr), jnp.asarray(rid)
+
+
+def make_sequential_stream(n: int, footprint: int, n_requesters: int = 2,
+                           write_ratio: float = 0.0, seed: int = 0):
+    """Paper §V-C pattern: requesters issue sequential (streaming) addresses."""
+    rng = np.random.default_rng(seed)
+    per = n // n_requesters
+    addr = np.concatenate(
+        [np.arange(per, dtype=np.int32) % footprint for _ in range(n_requesters)]
+    )
+    rid = np.concatenate(
+        [np.full(per, r, np.int32) for r in range(n_requesters)]
+    )
+    order = np.arange(per * n_requesters).reshape(n_requesters, per).T.reshape(-1)
+    wr = rng.random(per * n_requesters) < write_ratio
+    return jnp.asarray(addr[order]), jnp.asarray(wr), jnp.asarray(rid[order])

@@ -1,0 +1,1 @@
+"""Data pipelines: deterministic synthetic LM + ESF trace replay."""

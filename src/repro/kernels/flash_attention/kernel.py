@@ -1,0 +1,113 @@
+"""Blocked causal flash attention (Pallas TPU kernel).
+
+Grid: (batch, kv_head, q_group, q_block, kv_block) with the kv_block axis
+innermost and sequential — online-softmax statistics (m, l) and the output
+accumulator are carried across kv steps in VMEM scratch.  Block shapes are
+MXU-aligned (multiples of 128 on the matmul dims; q/kv block defaults 512/512
+keep the working set q(512x128) + k/v(2x512x128) + acc ~= 0.6 MB well inside
+VMEM).  Causal blocks above the diagonal are masked; fully-masked kv blocks
+still execute (Pallas grids are dense) but contribute zero — the ops wrapper
+chooses block sizes so at most half the steps are dead for causal runs.
+
+GQA is handled by the wrapper: query heads are grouped per KV head and the
+grid iterates (kv_head, group) pairs, so K/V blocks are never materialized
+`G` times.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, q_blk: int, kv_blk: int,
+                  kv_steps: int, window: int):
+    qi = pl.program_id(3)
+    ki = pl.program_id(4)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)            # (q_blk, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (kv_blk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ki * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        o_ref[0, 0, 0] = (acc_scr[...] /
+                          jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "q_blk", "kv_blk", "window", "interpret"))
+def flash_attention_gqa(q, k, v, *, causal: bool = True, q_blk: int = 512,
+                        kv_blk: int = 512, window: int = 0,
+                        interpret: bool = False):
+    """q: (B, KV, G, S, D); k, v: (B, KV, T, D).  Returns (B, KV, G, S, D)."""
+    b, kvh, g, s, d = q.shape
+    t = k.shape[2]
+    q_blk = min(q_blk, s)
+    kv_blk = min(kv_blk, t)
+    assert s % q_blk == 0 and t % kv_blk == 0
+    kv_steps = t // kv_blk
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, q_blk=q_blk,
+        kv_blk=kv_blk, kv_steps=kv_steps, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh, g, s // q_blk, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q_blk, d),
+                         lambda b_, h, g_, qi, ki: (b_, h, g_, qi, 0)),
+            pl.BlockSpec((1, 1, kv_blk, d),
+                         lambda b_, h, g_, qi, ki: (b_, h, ki, 0)),
+            pl.BlockSpec((1, 1, kv_blk, d),
+                         lambda b_, h, g_, qi, ki: (b_, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q_blk, d),
+                               lambda b_, h, g_, qi, ki: (b_, h, g_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

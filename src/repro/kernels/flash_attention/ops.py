@@ -1,0 +1,45 @@
+"""jit'd public wrapper: model-layout GQA flash attention.
+
+Accepts the model's (B, S, H, D) / (B, T, KV, D) layout, regroups query heads
+per KV head (no K/V replication), and dispatches to the Pallas kernel —
+interpret mode off-TPU so the same call validates on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_gqa
+from .ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "q_blk", "kv_blk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto", q_blk: int = 512, kv_blk: int = 512):
+    """q: (B, S, H, D); k, v: (B, T, KV, D) -> (B, S, H, D).
+
+    impl: auto | pallas | interpret | ref
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        out = flash_attention_ref(qg, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention_gqa(qg, kt, vt, causal=causal, window=window,
+                                  q_blk=q_blk, kv_blk=kv_blk,
+                                  interpret=(impl == "interpret"))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, KV, G, S, D); k, v: (B, KV, T, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bkgsd,bktd->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    sq, t = q.shape[3], k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((sq, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,bktd->bkgsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

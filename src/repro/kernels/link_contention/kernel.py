@@ -1,0 +1,108 @@
+"""Segmented tropical ((max,+)) scan — the ESF engine hotspot (Pallas TPU).
+
+One fixpoint round of the schedule engine reduces to: given items sorted by
+(channel, arrival), compute per item
+
+    depart_i = max(arrive_i, depart_{i-1 within same channel}) + ser_i
+
+Each item is the affine-max map f_i(x) = max(arrive_i, x) + ser_i; maps
+compose as (c, m): f(x) = max(c, x + m), f2.f1 = (max(c2, c1+m2), m1+m2),
+with a reset at channel boundaries — a *segmented associative scan*.  The
+kernel processes the item stream in VMEM blocks: an intra-block Hillis–Steele
+scan over log2(block) shifted combines (VPU-vectorized), then a carried
+(c, m) composition across blocks in scratch (sequential grid).
+
+Times are int32 (the engine's int64 picoseconds are range-reduced by the ops
+wrapper before dispatch; exactness is preserved because one round's spans fit
+32 bits after rebasing).  This kernel covers the full-duplex no-row-state
+fast path — the general case (turnaround, DRAM rows) stays on the lax.scan
+path in `core.engine`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -(2 ** 30)  # python int: keeps the kernel free of captured consts
+
+
+def _seg_kernel(chan_ref, arrive_ref, ser_ref, depart_ref,
+                carry_c, carry_m, carry_chan, *, blk: int, steps: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_c[...] = jnp.full_like(carry_c, NEG)
+        carry_m[...] = jnp.zeros_like(carry_m)
+        carry_chan[...] = jnp.full_like(carry_chan, -1)
+
+    chan = chan_ref[...]
+    arrive = arrive_ref[...]
+    ser = ser_ref[...]
+
+    # per-item map (c, m) = (arrive + ser, ser); segment id = channel
+    c = arrive + ser
+    m = ser
+
+    # segmented Hillis–Steele inclusive scan over the block
+    seg = chan
+    k = 1
+    while k < blk:
+        c_prev = jnp.concatenate([jnp.full((k,), NEG, jnp.int32), c[:-k]])
+        m_prev = jnp.concatenate([jnp.zeros((k,), jnp.int32), m[:-k]])
+        seg_prev = jnp.concatenate([jnp.full((k,), -1, jnp.int32), seg[:-k]])
+        same = seg_prev == seg
+        c = jnp.where(same, jnp.maximum(c, c_prev + m), c)
+        m = jnp.where(same, m + m_prev, m)
+        k *= 2
+
+    # compose with the inter-block carry where the first run continues it
+    cc = carry_c[0]
+    cm = carry_m[0]
+    cchan = carry_chan[0]
+    first_chan = chan[0]
+    # items whose whole prefix (within block) is one run starting at item 0
+    run0 = jnp.cumprod((chan == first_chan).astype(jnp.int32)) == 1
+    cont = run0 & (cchan == first_chan)
+    c = jnp.where(cont, jnp.maximum(c, cc + m), c)
+
+    depart_ref[...] = c
+
+    # new carry = composed map of the trailing run of the block
+    last_chan = chan[blk - 1]
+    carry_c[0] = c[blk - 1]
+    carry_m[0] = 0   # depart is absolute after scan: m folds into c
+    carry_chan[0] = last_chan
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def segmented_depart(chan, arrive, ser, *, blk: int = 2048,
+                     interpret: bool = False):
+    """chan: (K,) int32 sorted; arrive, ser: (K,) int32 -> depart (K,) int32."""
+    k = chan.shape[0]
+    pad = (-k) % blk
+    if pad:
+        chan = jnp.concatenate([chan, jnp.full((pad,), -2, jnp.int32)])
+        arrive = jnp.concatenate([arrive, jnp.zeros((pad,), jnp.int32)])
+        ser = jnp.concatenate([ser, jnp.zeros((pad,), jnp.int32)])
+    n = chan.shape[0]
+    steps = n // blk
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, blk=blk, steps=steps),
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
+                  pl.BlockSpec((blk,), lambda i: (i,)),
+                  pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int32),
+                        pltpu.VMEM((1,), jnp.int32),
+                        pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(chan, arrive, ser)
+    return out[:k]

@@ -1,0 +1,36 @@
+"""Public wrapper: int64-picosecond engine round -> int32 kernel dispatch.
+
+The engine keeps exact int64 picoseconds; one schedule round's time span fits
+comfortably in int32 after rebasing to the round's minimum arrival, so the
+wrapper rebases, dispatches, and restores the offset.  Falls back to the
+lax.scan oracle when the span would overflow (never observed at bench sizes)
+or off-TPU unless interpret is forced.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segmented_depart
+from .ref import segmented_depart_ref
+
+_SPAN_LIMIT = (1 << 30) - 1
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def depart_times(chan, arrive_ps, ser_ps, *, impl: str = "auto"):
+    """chan (K,) sorted int; arrive/ser (K,) int64 ps -> depart int64 ps."""
+    base = jnp.min(arrive_ps)
+    arr32 = (arrive_ps - base).astype(jnp.int32)
+    ser32 = ser_ps.astype(jnp.int32)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        dep = segmented_depart_ref(chan.astype(jnp.int32), arr32, ser32)
+    else:
+        dep = segmented_depart(chan.astype(jnp.int32), arr32, ser32,
+                               interpret=(impl == "interpret"))
+    return dep.astype(jnp.int64) + base

@@ -1,0 +1,23 @@
+"""Oracle for the segmented depart kernel: direct lax.scan recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_depart_ref(chan, arrive, ser):
+    """depart_i = max(arrive_i, depart_{i-1} if same channel) + ser_i."""
+
+    def step(carry, x):
+        prev_chan, prev_dep = carry
+        c, a, s = x
+        same = c == prev_chan
+        dep = jnp.where(same, jnp.maximum(a, prev_dep), a) + s
+        return (c, dep), dep
+
+    (_, _), dep = jax.lax.scan(
+        step, (jnp.int32(-1), jnp.int32(0)),
+        (chan.astype(jnp.int32), arrive.astype(jnp.int32),
+         ser.astype(jnp.int32)))
+    return dep

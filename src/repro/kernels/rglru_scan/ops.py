@@ -1,0 +1,19 @@
+"""jit'd wrapper with backend dispatch (pallas on TPU, oracle elsewhere)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rglru_scan_pallas
+from .ref import rglru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def rglru_scan(a, b, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return rglru_scan_ref(a, b)
+    return rglru_scan_pallas(a, b, interpret=(impl == "interpret"))

@@ -1,0 +1,19 @@
+"""Oracle: lax.associative_scan formulation (shared with models.rglru)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via parallel associative scan; (B,S,D) f32."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h

@@ -1,0 +1,98 @@
+"""Mamba-2 SSD chunk scan (Pallas TPU kernel).
+
+Grid: (batch, head, chunk) with the chunk axis innermost and sequential; the
+inter-chunk recurrent state (P, N) rides in VMEM scratch.  Per chunk (length
+Q) everything is dense MXU matmuls on (Q,Q)/(Q,N)/(Q,P) tiles:
+
+  y_diag = (C B^T  .  exp(segsum(logA)))  (x*dt)       intra-chunk
+  y_off  = C  state_in . decay_in                       inter-chunk
+  state  = state_in * total_decay + B^T (x*dt . decay_rest)
+
+Default Q=128, P,N multiples of 64/128: VMEM footprint ~ (Q*Q + 2*Q*N +
+2*Q*P + P*N) * 4B ~= 0.5 MB.  The pure-jnp oracle is
+`repro.models.ssd.ssd_chunked` (shared semantics with the model block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_scr, *,
+                q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)     # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)   # (Q,)
+    a_log = alog_ref[0]                        # ()
+    bmat = b_ref[0, 0].astype(jnp.float32)     # (Q, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)     # (Q, N)
+
+    loga = -jnp.exp(a_log) * dt                # (Q,) < 0
+    cs = jnp.cumsum(loga)                      # (Q,)
+    seg = cs[:, None] - cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)      # (Q, Q)
+
+    xdt = x * dt[:, None]                      # (Q, P)
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the incoming state
+    decay_in = jnp.exp(cs)                     # (Q,)
+    state_in = state_scr[...]                  # (P, N)
+    y += (jax.lax.dot_general(cmat, state_in, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+          * decay_in[:, None])
+
+    # state update
+    decay_rest = jnp.exp(cs[-1] - cs)          # (Q,)
+    new_state = state_in * jnp.exp(cs[-1]) + jax.lax.dot_general(
+        xdt * decay_rest[:, None], bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    state_scr[...] = new_state
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_pallas(x, dt, a_log, b, c, *, chunk: int = 128,
+                     interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b,c: (B,S,N) -> y (B,S,H,P)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    xt = x.transpose(0, 2, 1, 3).reshape(bsz, h, nc, q, p)
+    dtt = dt.transpose(0, 2, 1).reshape(bsz, h, nc, q)
+    bt = b.reshape(bsz, nc, q, n)
+    ct = c.reshape(bsz, nc, q, n)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda b_, h_, ci: (b_, h_, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda b_, h_, ci: (b_, h_, ci, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, ci: (h_,)),
+            pl.BlockSpec((1, 1, q, n), lambda b_, h_, ci: (b_, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda b_, h_, ci: (b_, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q, p),
+                               lambda b_, h_, ci: (b_, h_, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, nc, q, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a_log, bt, ct)
+    return out.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,20 @@
+"""jit'd wrapper with backend dispatch (pallas on TPU, oracle elsewhere)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_chunk_pallas
+from .ref import ssd_chunk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_chunk(x, dt, a_log, b, c, *, chunk: int = 128, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return ssd_chunk_ref(x, dt, a_log, b, c, chunk=chunk)
+    return ssd_chunk_pallas(x, dt, a_log, b, c, chunk=chunk,
+                            interpret=(impl == "interpret"))

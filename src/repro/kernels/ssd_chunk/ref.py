@@ -1,0 +1,7 @@
+"""Oracle: the model's chunked SSD (shared semantics)."""
+
+from repro.models.ssd import ssd_chunked
+
+
+def ssd_chunk_ref(x, dt, a_log, b, c, *, chunk: int = 128):
+    return ssd_chunked(x, dt, a_log, b, c, chunk=chunk)

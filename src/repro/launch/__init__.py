@@ -1,0 +1,1 @@
+"""Launchers: mesh, dryrun, roofline, hillclimb, train, serve."""

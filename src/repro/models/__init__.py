@@ -1,0 +1,1 @@
+"""Model zoo: layers, attention, MoE, RG-LRU, SSD, transformer assembly."""

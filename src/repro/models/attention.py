@@ -1,0 +1,242 @@
+"""GQA attention: plain, KV-chunked (long-context), sliding-window, decode.
+
+Three execution paths share one parameter layout:
+
+  * plain     — masked S x S attention; used for training shapes (<= ~8k)
+                under remat, where the S^2 block fits comfortably;
+  * chunked   — lax.scan over KV chunks with online softmax (a pure-jnp
+                flash formulation): O(S * chunk) memory; used for 32k+
+                prefill lowering.  The Pallas kernel
+                (`repro.kernels.flash_attention`) is the TPU fast path with
+                this as its oracle semantics;
+  * decode    — one query token against the KV cache (O(S) per step), with
+                GQA head grouping and optional sliding-window ring cache.
+
+dtype: qk products and softmax accumulate in f32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .layers import DTYPE, _normal, rope
+
+NEG = -2.0e38
+
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, head_dim: int):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _normal(kq, (d, n_heads * head_dim), d ** -0.5),
+        "wk": _normal(kk, (d, n_kv * head_dim), d ** -0.5),
+        "wv": _normal(kv, (d, n_kv * head_dim), d ** -0.5),
+        "wo": _normal(ko, (n_heads * head_dim, d), (n_heads * head_dim) ** -0.5),
+    }
+
+
+def attn_axes():
+    return {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+            "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+
+
+def _project(p, x, n_heads, n_kv, head_dim, positions, rope_theta):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, head_dim)
+    if rope_theta:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,KV,G,D), k: (B,T,KV,D) -> (B,KV,G,S,T) f32."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def plain_attention(q, k, v, *, causal=True, window: int | None = None,
+                    q_offset=0):
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    scores = _gqa_scores(qg, k) / jnp.sqrt(d).astype(jnp.float32)
+    t = k.shape[1]
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)
+
+
+def chunked_attention(q, k, v, *, chunk: int = 1024, causal=True,
+                      window: int | None = None):
+    """Online-softmax scan over KV chunks (flash semantics, pure jnp)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    t = k.shape[1]
+    n_chunks = (t + chunk - 1) // chunk
+    pad = n_chunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(b, s, kvh, g, d)
+    qpos = jnp.arange(s)[:, None]
+
+    @jax.checkpoint  # keep only the O(S) carry per chunk under outer-remat bwd
+    def step(carry, xs):
+        m, l, acc, idx = carry
+        kb, vb = xs
+        scores = _gqa_scores(qg, kb) / jnp.sqrt(d).astype(jnp.float32)
+        kpos = idx * chunk + jnp.arange(chunk)[None, :]
+        mask = kpos < t
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None, None], scores, NEG)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vb.dtype), vb)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((b, kvh, g, s), NEG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, d), DTYPE)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int | None = None):
+    """q: (B,1,H,D); caches: (B,T,KV,D); lengths: (B,) valid prefix length.
+
+    For sliding-window layers the cache is a ring buffer of size W; masking
+    is by *slot validity*, handled by the caller via `lengths` semantics.
+    """
+    b, _, h, d = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    t = k_cache.shape[1]
+    qg = q.reshape(b, 1, kvh, g, d)
+    scores = _gqa_scores(qg, k_cache) / jnp.sqrt(d).astype(jnp.float32)
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos < lengths[:, None]
+    if window is not None:
+        mask &= kpos > (lengths[:, None] - 1 - window)
+    scores = jnp.where(mask[:, None, None, None], scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+def attention_block(p, x, positions, cfg, *, mode, cache=None, window=None,
+                    cache_len=None):
+    """Full attention sub-block.  mode: train | prefill | decode.
+
+    Returns (out, new_cache).  Caches: dict(k, v, len) where k/v are
+    (B, T, KV, D); T = min(window, cache_len) for windowed layers.  Windowed
+    caches are ring buffers: token at position p lives in slot p % T, both
+    at prefill handoff and during decode.
+    """
+    n_heads, n_kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q, k, v = _project(p, x, n_heads, n_kv, hd, positions, cfg.rope_theta)
+
+    if mode == "decode":
+        assert cache is not None
+        b = x.shape[0]
+        t = cache["k"].shape[1]
+        # ring-buffer write position for windowed caches, linear otherwise
+        pos = cache["len"]
+        slot = pos % jnp.int32(t)
+        # per-sequence scatter at `slot` via one-hot mix (B,T)
+        oh = jax.nn.one_hot(slot, t, dtype=cache["k"].dtype)
+        k_upd = cache["k"] * (1 - oh)[:, :, None, None] + \
+            oh[:, :, None, None] * k.astype(cache["k"].dtype)
+        v_upd = cache["v"] * (1 - oh)[:, :, None, None] + \
+            oh[:, :, None, None] * v.astype(cache["v"].dtype)
+        lengths = jnp.minimum(pos + 1, t)
+        out = decode_attention(q, k_upd, v_upd, lengths,
+                               window=None)  # ring slots are all valid-masked
+        y = out.reshape(b, 1, n_heads * hd) @ p["wo"]
+        new_cache = {"k": k_upd, "v": v_upd, "len": pos + 1}
+        return y, new_cache
+
+    # plain materializes S^2 scores: fine to 2k; beyond that the chunked
+    # (flash-semantics) path bounds memory to O(S x chunk) per head
+    if window is not None:
+        out = plain_attention(q, k, v, causal=True, window=window) \
+            if x.shape[1] <= 2048 else \
+            chunked_attention(q, k, v, causal=True, window=window,
+                              chunk=cfg.attn_chunk)
+    elif x.shape[1] <= 2048:
+        out = plain_attention(q, k, v, causal=cfg.causal)
+    else:
+        out = chunked_attention(q, k, v, causal=cfg.causal,
+                                chunk=cfg.attn_chunk)
+    out = shard(out, "batch", "seq", "heads", None)
+    y = out.reshape(*x.shape[:2], n_heads * hd) @ p["wo"]
+    new_cache = None
+    if mode == "prefill" and not cfg.causal:
+        pass  # encoder layers carry no cache
+    elif mode == "prefill":
+        full = cache_len if cache_len is not None else cfg.max_seq
+        t = min(window, full) if window else full
+        s = x.shape[1]
+        keep = min(s, t)
+        kk = jnp.zeros((x.shape[0], t, n_kv, hd), DTYPE).at[:, :keep].set(
+            k[:, -keep:].astype(DTYPE))
+        vv = jnp.zeros((x.shape[0], t, n_kv, hd), DTYPE).at[:, :keep].set(
+            v[:, -keep:].astype(DTYPE))
+        if s > t:
+            # ring alignment: token p must live in slot p % t
+            kk = jnp.roll(kk, shift=s % t, axis=1)
+            vv = jnp.roll(vv, shift=s % t, axis=1)
+        new_cache = {"k": kk, "v": vv,
+                     "len": jnp.full((x.shape[0],), s, jnp.int32)}
+    return shard(y, "batch", "seq", "embed_act"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec decoders, e.g. whisper)
+# ---------------------------------------------------------------------------
+
+def cross_attention_block(p, x, enc_kv, cfg):
+    """x: decoder states (B,S,D); enc_kv: dict(k, v) precomputed from the
+    encoder output — (B, T_enc, KV, D).  Non-causal over encoder positions."""
+    n_heads, n_kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, hd)
+    out = plain_attention(q, enc_kv["k"], enc_kv["v"], causal=False)
+    y = out.reshape(b, s, n_heads * hd) @ p["wo"]
+    return shard(y, "batch", "seq", "embed_act"), None
+
+
+def encode_cross_kv(p, enc_out, cfg):
+    """Project encoder output once into this layer's cross K/V."""
+    b, t, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(b, t, cfg.n_kv, cfg.head_dim)
+    v = (enc_out @ p["wv"]).reshape(b, t, cfg.n_kv, cfg.head_dim)
+    return {"k": k, "v": v}

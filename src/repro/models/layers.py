@@ -1,0 +1,122 @@
+"""Shared model layers: norms, embeddings, RoPE, gated MLPs.
+
+Conventions:
+  * params are plain pytrees (dicts of jnp arrays); every init_* function has
+    a matching *_axes function returning the logical sharding axes tuple per
+    leaf (consumed by `parallel.sharding.param_specs`);
+  * compute dtype bf16, accumulation/normalization f32 — explicit everywhere
+    (repro.core enables x64 globally; nothing here may rely on default dtypes);
+  * activations are annotated with logical axes via `sharding.shard`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+DTYPE = jnp.bfloat16
+
+
+def _normal(key, shape, scale, dtype=DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm_axes():
+    return {"scale": ("embed_act",)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (tied LM head)
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int):
+    return {"tok": _normal(key, (vocab, d), d ** -0.5)}
+
+
+def embed_axes():
+    return {"tok": ("vocab", "embed")}
+
+
+def embed(p, tokens):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    return shard(x.astype(DTYPE), "batch", "seq", "embed_act")
+
+
+def unembed(p, x):
+    logits = jnp.einsum("bsd,vd->bsv", x, p["tok"])
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": _normal(k1, (d, f), d ** -0.5),
+        "wi_up": _normal(k2, (d, f), d ** -0.5),
+        "wo": _normal(k3, (f, d), f ** -0.5),
+    }
+
+
+def mlp_axes():
+    return {"wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"),
+            "wo": ("mlp", "embed")}
+
+
+def mlp(p, x, act=jax.nn.silu):
+    h = act(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(h @ p["wo"], "batch", "seq", "embed_act")
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross entropy; logits f32 accumulation."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,85 @@
+"""Model zoo facade: step functions + abstract input specs per (arch, shape).
+
+`input_specs` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct and shardable, with no device allocation — which is what the
+multi-pod dry-run lowers against.  Modality frontends are stubs by contract:
+whisper gets precomputed frame embeddings, phi-3-vision gets projected patch
+embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as TF
+from repro.models.layers import DTYPE
+
+
+def train_step_fn(cfg: ArchConfig):
+    def loss(params, batch):
+        return TF.loss_fn(params, cfg, batch)
+    return loss
+
+
+def init_params(cfg: ArchConfig, key):
+    return TF.init_params(cfg, key)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: TF.init_params(cfg, k), jax.random.key(0))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: TF.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for the step function selected by shape.kind."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    extra = {}
+    if cfg.vision_patches:
+        extra["frontend_embeds"] = sds((b, cfg.vision_patches, cfg.d_model),
+                                       DTYPE)
+    if cfg.enc_layers:
+        extra["frontend_embeds"] = sds((b, cfg.enc_frames, cfg.d_model), DTYPE)
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        batch.update(extra)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), i32), "max_len": s}
+        out.update(extra)
+        return out
+    # decode / long_decode: one new token against a seq_len-deep cache
+    cache = abstract_cache(cfg, b, s)
+    return {
+        "cache": cache,
+        "tokens": sds((b, 1), i32),
+        "positions": sds((b, 1), i32),
+    }
+
+
+def step_fn(cfg: ArchConfig, kind: str):
+    """The jit-able step for a shape kind (dry-run + runtime entry point)."""
+    if kind == "train":
+        def train_loss(params, batch):
+            return TF.loss_fn(params, cfg, batch)
+        return train_loss
+    if kind == "prefill":
+        def prefill(params, tokens, max_len, frontend_embeds=None):
+            return TF.prefill(params, cfg, tokens, max_len,
+                              frontend_embeds=frontend_embeds)
+        return prefill
+    if kind in ("decode", "long_decode"):
+        def decode(params, cache, tokens, positions):
+            return TF.decode_step(params, cfg, cache, tokens, positions)
+        return decode
+    raise ValueError(kind)

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts MLP: token-choice top-k with capacity dispatch.
+
+Dense one-hot dispatch/combine einsums (T5X/MaxText "dropping" MoE): fully
+static shapes (dry-run friendly), expert-parallel over the 'model' mesh axis
+when n_experts divides it, otherwise experts replicated with tensor-parallel
+expert FFN (grok-1: 8 experts on a 16-way model axis — see
+DESIGN.md §Arch-applicability).
+
+The per-device dispatch tensor is (tokens/device, E, C) in bf16 under remat —
+transient, sized by capacity C = ceil(top_k * tokens_per_group / E * cf).
+Aux load-balance loss follows Switch/ST-MoE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .layers import DTYPE, _normal
+
+
+def init_moe(key, d: int, f: int, n_experts: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": _normal(k1, (d, n_experts), d ** -0.5, jnp.float32),
+        "wi_gate": _normal(k2, (n_experts, d, f), d ** -0.5),
+        "wi_up": _normal(k3, (n_experts, d, f), d ** -0.5),
+        "wo": _normal(k4, (n_experts, f, d), f ** -0.5),
+    }
+
+
+def moe_axes(expert_sharding: str):
+    """expert_sharding: 'expert' (E over model) or 'ffn' (d_ff over model)."""
+    if expert_sharding == "expert":
+        e, f = "experts", "expert_mlp"
+    else:
+        e, f = None, "mlp"
+    return {"router": ("embed", None),
+            "wi_gate": (e, "embed", f), "wi_up": (e, "embed", f),
+            "wo": (e, f, "embed")}
+
+
+def moe_mlp(p, x, *, top_k: int, capacity_factor: float = 1.25,
+            group_size: int = 512):
+    """x: (B, S, D) -> (B, S, D), aux_loss (f32 scalar).
+
+    Tokens dispatch within groups of `group_size` (T5X-style): the dispatch
+    tensor is (G, tg, E, C_g) with C_g = ceil(top_k * tg / E * cf), so its
+    total size scales with tg (not T) — a flat 32k-token dispatch for a
+    128-expert layer would be ~14 GB/device, grouped it is ~300 MB.
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    tg = min(group_size, t)
+    g = t // tg
+    assert g * tg == t, (t, tg)
+    xt = x.reshape(g, tg, d)
+    xt = shard(xt, "batch", None, None)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (G, tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (G, tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    cap = min(max(int(top_k * tg / e * capacity_factor), 1), tg)
+
+    # position of each (token, k) within its expert's per-group buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (G, tg, K, E)
+    flatoh = onehot.reshape(g, tg * top_k, e)
+    pos_in_expert = (jnp.cumsum(flatoh, axis=1) - flatoh) \
+        .reshape(g, tg, top_k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)           # (G, tg, K)
+    keep = pos < cap
+
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)     # (G, tg, K, C)
+    disp = jnp.einsum("gtke,gtk,gtkc->gtec", onehot.astype(jnp.float32),
+                      keep.astype(jnp.float32), pos_oh)
+    comb = jnp.einsum("gtke,gtk,gtkc->gtec", onehot.astype(jnp.float32),
+                      (gate_vals * keep).astype(jnp.float32), pos_oh)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xt, disp.astype(DTYPE))  # (G, E, C, D)
+    xe = shard(xe, "batch", "experts", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["wi_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    ye = shard(ye, "batch", "experts", None, None)
+    yt = jnp.einsum("gecd,gtec->gtd", ye, comb.astype(DTYPE))
+
+    # Switch aux loss: E * sum(frac_tokens * frac_probs)
+    frac_tokens = jnp.mean(onehot[..., 0, :].astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return shard(yt.reshape(b, s, d), "batch", "seq", "embed_act"), aux

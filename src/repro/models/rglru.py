@@ -1,0 +1,108 @@
+"""RG-LRU recurrence block (RecurrentGemma / Griffin).
+
+The recurrent sub-block: linear projections, a short causal temporal conv,
+and the Real-Gated Linear Recurrent Unit
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = a^(c * r_t)            with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence h_t = a_t h_{t-1} + b_t is affine and associative, so training
+and prefill run as a parallel `lax.associative_scan` over the sequence — the
+TPU-friendly formulation (the Pallas kernel `repro.kernels.rglru_scan` is the
+blocked fast path; this module is its oracle).  Decode is the O(1) single
+step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .layers import DTYPE, _normal
+
+C_EXP = 8.0
+CONV_W = 4
+
+
+def init_rglru(key, d: int):
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": _normal(ks[0], (d, d), d ** -0.5),
+        "w_gate": _normal(ks[1], (d, d), d ** -0.5),
+        "conv": _normal(ks[2], (CONV_W, d), 0.1),
+        "w_r": _normal(ks[3], (d, d), d ** -0.5, jnp.float32),
+        "w_i": _normal(ks[4], (d, d), d ** -0.5, jnp.float32),
+        # Lambda init so a = sigmoid(L) in ~(0.9, 0.999)
+        "lam": jnp.linspace(2.2, 6.9, d).astype(jnp.float32),
+        "w_o": _normal(ks[5], (d, d), d ** -0.5),
+    }
+
+
+def rglru_axes():
+    return {"w_x": ("embed", "mlp"), "w_gate": ("embed", "mlp"),
+            "conv": (None, "mlp"), "w_r": ("embed", "mlp"),
+            "w_i": ("embed", "mlp"), "lam": ("mlp",),
+            "w_o": ("mlp", "embed")}
+
+
+def _causal_conv(x, w, state=None):
+    """x: (B,S,D); w: (W,D) depthwise causal conv.  state: (B,W-1,D)."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W))
+    new_state = xp[:, -(CONV_W - 1):]
+    return out, new_state
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"])
+    i = jax.nn.sigmoid(uf @ p["w_i"])
+    log_a = C_EXP * r * jax.nn.log_sigmoid(p["lam"])   # log a_t  (<0)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(p, u):
+    """Parallel associative scan over S.  u: (B,S,D) -> h: (B,S,D) f32."""
+    a, b = _gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p, x, cfg, *, mode, cache=None):
+    """Full recurrent sub-block.  cache: dict(conv (B,W-1,D), h (B,D))."""
+    u = x @ p["w_x"]
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32)).astype(DTYPE)
+    if mode == "decode":
+        u_c, conv_state = _causal_conv(u, p["conv"], cache["conv"])
+        a, b = _gates(p, u_c)
+        h = a[:, 0] * cache["h"] + b[:, 0]                  # (B, D)
+        y = (h[:, None] * gate.astype(jnp.float32)).astype(DTYPE) @ p["w_o"]
+        return y, {"conv": conv_state, "h": h}
+    u_c, conv_state = _causal_conv(u, p["conv"])
+    h = rglru_scan(p, u_c)
+    h = shard(h, "batch", "seq", "mlp")
+    y = (h * gate.astype(jnp.float32)).astype(DTYPE) @ p["w_o"]
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"conv": conv_state.astype(DTYPE), "h": h[:, -1]}
+    return shard(y, "batch", "seq", "embed_act"), new_cache
+
+
+def init_rglru_cache(b: int, d: int):
+    return {"conv": jnp.zeros((b, CONV_W - 1, d), DTYPE),
+            "h": jnp.zeros((b, d), jnp.float32)}

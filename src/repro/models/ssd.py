@@ -1,0 +1,208 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu 2024, "minimal ssd"): the sequence is split
+into chunks of length Q; within a chunk the output is a masked quadratic
+(attention-like) term, across chunks a small recurrent state (H, P, N) is
+passed through a cumulative-decay scan.  This keeps everything dense matmuls
+(MXU-friendly) with O(S*Q + S*N) work instead of a length-S sequential
+recurrence — the hardware adaptation the SSD paper itself argues for, and the
+reference semantics for the Pallas kernel `repro.kernels.ssd_chunk`.
+
+Block structure (simplified mamba2): in_proj -> [z | x | B | C | dt],
+depthwise causal conv on (x,B,C), SSD core, gated RMSNorm, out_proj.
+Decode is the O(1) recurrence h = a h + dt*x (x) B; y = C . h.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .layers import DTYPE, _normal, rmsnorm, init_rmsnorm
+
+CONV_W = 4
+
+
+def init_ssd(key, d: int, *, n_heads: int, head_dim: int, state: int):
+    ks = jax.random.split(key, 5)
+    d_in = n_heads * head_dim
+    return {
+        "in_proj": _normal(ks[0], (d, 2 * d_in + 2 * state + n_heads), d ** -0.5),
+        "conv": _normal(ks[1], (CONV_W, d_in + 2 * state), 0.1),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_rmsnorm(d_in),
+        "out_proj": _normal(ks[2], (d_in, d), d_in ** -0.5),
+    }
+
+
+def ssd_axes():
+    return {"in_proj": ("embed", "mlp"), "conv": (None, None),
+            "A_log": (None,), "dt_bias": (None,),
+            "norm": {"scale": (None,)}, "out_proj": ("mlp", "embed")}
+
+
+def _split(p, x, n_heads, head_dim, state):
+    d_in = n_heads * head_dim
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xs = zxbcdt[..., d_in:2 * d_in]
+    bc = zxbcdt[..., 2 * d_in:2 * d_in + 2 * state]
+    dt = zxbcdt[..., 2 * d_in + 2 * state:]
+    return z, xs, bc, dt
+
+
+def _conv(x, w, cache=None):
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), xp[:, -(CONV_W - 1):]
+
+
+def _segsum(loga):
+    """(..., Q) -> (..., Q, Q) lower-tri cumulative sums (log decays)."""
+    q = loga.shape[-1]
+    cs = jnp.cumsum(loga, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xs, dt, A, B, C, chunk: int = 128):
+    """Minimal-SSD over chunks.
+
+    xs: (b,s,h,p)  dt: (b,s,h)  A: (h,)  B,C: (b,s,n)  ->  y: (b,s,h,p)
+    """
+    b, s, h, p = xs.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    nc = (s + q - 1) // q
+    pad = nc * q - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    xs_c = xs.reshape(b, nc, q, h, p)
+    dt_c = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    B_c = B.reshape(b, nc, q, n).astype(jnp.float32)
+    C_c = C.reshape(b, nc, q, n).astype(jnp.float32)
+
+    logA = -jnp.exp(A)[None, None, None, :] * dt_c          # (b,c,q,h) < 0
+    logA_h = logA.transpose(0, 1, 3, 2)                      # (b,c,h,q)
+    xdt = xs_c.astype(jnp.float32) * dt_c[..., None]
+
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(logA_h))                             # (b,c,h,q,q)
+    scores = jnp.einsum("bcin,bcjn,bchij->bchij", C_c, B_c, L)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xdt)
+
+    # chunk states and inter-chunk scan
+    decay_to_end = jnp.exp(cs_last := (jnp.cumsum(logA_h, axis=-1)))
+    decay_rest = jnp.exp(cs_last[..., -1:] - cs_last)        # (b,c,h,q)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", B_c, decay_rest, xdt)
+    chunk_decay = jnp.exp(cs_last[..., -1])                  # (b,c,h)
+
+    def scan_fn(carry, xc):
+        st, dec = xc
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *before* this chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,c,h,p,n)
+
+    # inter-chunk (off-diagonal) term
+    decay_in = jnp.exp(cs_last)                              # (b,c,h,q)
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp", C_c, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(xs.dtype)
+
+
+def ssd_block(p, x, cfg, *, mode, cache=None):
+    """cache: dict(conv (B,W-1,d_conv), h (B,H,P,N))."""
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, bc, dt = _split(p, x, nh, hd, st)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    A = jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        conv_out, conv_state = _conv(conv_in, p["conv"], cache["conv"])
+        xs_c = conv_out[..., :nh * hd].reshape(x.shape[0], 1, nh, hd)
+        B = conv_out[..., nh * hd:nh * hd + st].astype(jnp.float32)
+        C = conv_out[..., nh * hd + st:].astype(jnp.float32)
+        dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+        a = jnp.exp(-A[None] * dtv)                          # (B,H)
+        xdt = xs_c[:, 0].astype(jnp.float32) * dtv[..., None]
+        h = cache["h"] * a[..., None, None] + \
+            jnp.einsum("bhp,bn->bhpn", xdt, B[:, 0])
+        y = jnp.einsum("bhpn,bn->bhp", h, C[:, 0])
+        y = y.reshape(x.shape[0], 1, nh * hd).astype(DTYPE)
+        y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(DTYPE))
+        return y @ p["out_proj"], {"conv": conv_state, "h": h}
+
+    conv_out, conv_state = _conv(conv_in, p["conv"])
+    xs_c = conv_out[..., :nh * hd].reshape(*x.shape[:2], nh, hd)
+    B = conv_out[..., nh * hd:nh * hd + st]
+    C = conv_out[..., nh * hd + st:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y = ssd_chunked(xs_c, dtv, p["A_log"], B, C, chunk=cfg.ssd_chunk)
+    y = y.reshape(*x.shape[:2], nh * hd)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(DTYPE))
+    y = shard(y @ p["out_proj"], "batch", "seq", "embed_act")
+    new_cache = None
+    if mode == "prefill":
+        # final state: recompute last-chunk state cheaply via decode-style
+        # accumulation is O(S); reuse the chunked states by one extra scan —
+        # here we simply run the last `CONV_W`-aware step on the final token
+        # for state handoff fidelity at block granularity.
+        b = x.shape[0]
+        new_cache = {"conv": conv_state.astype(DTYPE),
+                     "h": _final_state(xs_c, dtv, p["A_log"], B, C,
+                                       chunk=cfg.ssd_chunk)}
+    return y, new_cache
+
+
+def _final_state(xs, dt, A_log, B, C, chunk: int = 128):
+    """Exact final recurrent state h_S (B,H,P,N) via the same chunk scan."""
+    b, s, h, p = xs.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    nc = (s + q - 1) // q
+    pad = nc * q - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+    xs_c = xs.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    B_c = B.reshape(b, nc, q, n).astype(jnp.float32)
+    logA = (-jnp.exp(A_log)[None, None, None, :] * dt_c).transpose(0, 1, 3, 2)
+    cs = jnp.cumsum(logA, axis=-1)
+    decay_rest = jnp.exp(cs[..., -1:] - cs)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", B_c, decay_rest,
+                        xs_c * dt_c[..., None])
+    chunk_decay = jnp.exp(cs[..., -1])
+
+    def scan_fn(carry, xc):
+        st, dec = xc
+        return carry * dec[..., None, None] + st, None
+
+    final, _ = jax.lax.scan(
+        scan_fn, jnp.zeros((b, h, p, n), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    return final
+
+
+def init_ssd_cache(b: int, cfg):
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {"conv": jnp.zeros((b, CONV_W - 1, nh * hd + 2 * st), DTYPE),
+            "h": jnp.zeros((b, nh, hd, st), jnp.float32)}

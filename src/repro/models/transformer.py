@@ -1,0 +1,443 @@
+"""Model assembly: block stacks, layer scan + remat, train/prefill/decode.
+
+The stack is organized in *periods* (one repetition of cfg.pattern); periods
+are structurally identical, so their parameters stack on a leading 'stage'
+axis and the whole stack runs under `lax.scan(jax.checkpoint(period_fn))` —
+compact HLO (512-device lowering in seconds) and O(1-period) activation
+memory.  Heterogeneous families (recurrentgemma's rglru/rglru/attn_local
+pattern) are one period of three blocks.
+
+Entry points:
+  init_params / param_axes          parameter pytree + logical sharding axes
+  loss_fn(params, batch, cfg)       next-token CE (+ MoE aux)
+  prefill(params, tokens, cfg)      logits + cache
+  decode_step(params, cache, tok)   one-token serve step with KV/state cache
+  init_cache(cfg, batch, max_len)   cache pytree (for dry-run specs too)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from . import attention as A
+from . import moe as MOE
+from . import rglru as RG
+from . import ssd as SSD
+from .layers import (DTYPE, embed, embed_axes, init_embed, init_mlp,
+                     init_rmsnorm, mlp, mlp_axes, rmsnorm, rmsnorm_axes,
+                     softmax_xent, unembed)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {"norm1": init_rmsnorm(cfg.d_model)}
+    if kind in ("attn", "attn_local", "attn_moe", "cross"):
+        p["attn"] = A.init_attn(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        if kind == "attn_moe":
+            p["moe"] = MOE.init_moe(k2, cfg.d_model, cfg.d_ff,
+                                    cfg.moe.n_experts)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+        if kind == "cross":
+            p["xattn"] = A.init_attn(k3, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                     cfg.head_dim)
+            p["norm3"] = init_rmsnorm(cfg.d_model)
+    elif kind == "rglru":
+        p["rglru"] = RG.init_rglru(k1, cfg.d_model)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+    elif kind == "ssd":
+        p["ssd"] = SSD.init_ssd(k1, cfg.d_model, n_heads=cfg.ssm_heads,
+                                head_dim=cfg.ssm_head_dim, state=cfg.ssm_state)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return p
+
+
+def _block_axes(kind: str, cfg):
+    ax = {"norm1": rmsnorm_axes()}
+    if kind in ("attn", "attn_local", "attn_moe", "cross"):
+        ax["attn"] = A.attn_axes()
+        ax["norm2"] = rmsnorm_axes()
+        if kind == "attn_moe":
+            es = "expert" if cfg.moe.n_experts % 16 == 0 else "ffn"
+            ax["moe"] = MOE.moe_axes(es)
+        else:
+            ax["mlp"] = mlp_axes()
+        if kind == "cross":
+            ax["xattn"] = A.attn_axes()
+            ax["norm3"] = rmsnorm_axes()
+    elif kind == "rglru":
+        ax["rglru"] = RG.rglru_axes()
+        ax["norm2"] = rmsnorm_axes()
+        ax["mlp"] = mlp_axes()
+    elif kind == "ssd":
+        ax["ssd"] = SSD.ssd_axes()
+    return ax
+
+
+def tail_pattern(cfg):
+    """Blocks left over when n_layers is not a multiple of the period."""
+    return cfg.pattern[: cfg.n_layers % len(cfg.pattern)]
+
+
+def init_params(cfg, key):
+    keys = jax.random.split(key, cfg.n_periods + 3 + max(cfg.enc_layers, 1))
+    # one period of blocks, stacked over stages
+    def one_period(k):
+        ks = jax.random.split(k, len(cfg.pattern))
+        return {f"b{i}_{kind}": _init_block(ks[i], kind, cfg)
+                for i, kind in enumerate(cfg.pattern)}
+
+    stages = jax.vmap(one_period)(keys[:cfg.n_periods]) if cfg.n_periods > 1 \
+        else jax.tree.map(lambda x: x[None], one_period(keys[0]))
+    params = {
+        "embed": init_embed(keys[-1], cfg.vocab, cfg.d_model),
+        "stages": stages,
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    tail = tail_pattern(cfg)
+    if tail:
+        tk = jax.random.split(keys[-3], len(tail))
+        params["tail"] = {f"t{i}_{kind}": _init_block(tk[i], kind, cfg)
+                          for i, kind in enumerate(tail)}
+    if cfg.enc_layers:
+        ek = jax.random.split(keys[-2], cfg.enc_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_block(k, "attn", cfg))(ek)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model)
+    return params
+
+
+def param_axes(cfg):
+    def stage_axes():
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            blk = _block_axes(kind, cfg)
+            out[f"b{i}_{kind}"] = jax.tree.map(
+                lambda t: ("stage",) + t, blk,
+                is_leaf=lambda x: isinstance(x, tuple))
+        return out
+
+    axes = {
+        "embed": embed_axes(),
+        "stages": stage_axes(),
+        "final_norm": rmsnorm_axes(),
+    }
+    tail = tail_pattern(cfg)
+    if tail:
+        axes["tail"] = {f"t{i}_{kind}": _block_axes(kind, cfg)
+                        for i, kind in enumerate(tail)}
+    if cfg.enc_layers:
+        axes["encoder"] = jax.tree.map(
+            lambda t: ("stage",) + t, _block_axes("attn", cfg),
+            is_leaf=lambda x: isinstance(x, tuple))
+        axes["enc_norm"] = rmsnorm_axes()
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(p, kind, x, positions, cfg, *, mode, cache=None, enc_kv=None,
+                 cache_len=None):
+    aux = jnp.float32(0)
+    h = rmsnorm(p["norm1"], x)
+    new_cache = {}
+    if kind in ("attn", "attn_local", "attn_moe", "cross"):
+        window = cfg.window if kind == "attn_local" else None
+        a_out, a_cache = A.attention_block(
+            p["attn"], h, positions, cfg, mode=mode,
+            cache=None if cache is None else cache.get("attn"), window=window,
+            cache_len=cache_len)
+        x = x + a_out
+        if a_cache is not None:
+            new_cache["attn"] = a_cache
+        if kind == "cross":
+            hx = rmsnorm(p["norm3"], x)
+            if mode in ("train",):
+                kv = enc_kv
+            else:
+                kv = cache.get("xattn") if (cache and "xattn" in cache) else enc_kv
+                if mode == "prefill":
+                    new_cache["xattn"] = kv
+                elif cache and "xattn" in cache:
+                    new_cache["xattn"] = kv
+            xa_out, _ = A.cross_attention_block(p["xattn"], hx, kv, cfg)
+            x = x + xa_out
+        h2 = rmsnorm(p["norm2"], x)
+        if kind == "attn_moe":
+            m_out, aux = MOE.moe_mlp(p["moe"], h2, top_k=cfg.moe.top_k,
+                                     capacity_factor=cfg.moe.capacity_factor,
+                                     group_size=cfg.moe_group)
+        else:
+            m_out = mlp(p["mlp"], h2)
+        x = x + m_out
+    elif kind == "rglru":
+        r_out, r_cache = RG.rglru_block(
+            p["rglru"], h, cfg, mode=mode,
+            cache=None if cache is None else cache.get("rglru"))
+        x = x + r_out
+        if r_cache is not None:
+            new_cache["rglru"] = r_cache
+        h2 = rmsnorm(p["norm2"], x)
+        x = x + mlp(p["mlp"], h2)
+    elif kind == "ssd":
+        s_out, s_cache = SSD.ssd_block(
+            p["ssd"], h, cfg, mode=mode,
+            cache=None if cache is None else cache.get("ssd"))
+        x = x + s_out
+        if s_cache is not None:
+            new_cache["ssd"] = s_cache
+    return x, new_cache, aux
+
+
+def _period_fn(stage_params, x, positions, cfg, *, mode, stage_cache=None,
+               enc_kv=None, cache_len=None):
+    new_caches = {}
+    aux_total = jnp.float32(0)
+    for i, kind in enumerate(cfg.pattern):
+        key = f"b{i}_{kind}"
+        cache_i = None if stage_cache is None else stage_cache.get(key)
+        x, nc, aux = _apply_block(stage_params[key], kind, x, positions, cfg,
+                                  mode=mode, cache=cache_i, enc_kv=enc_kv,
+                                  cache_len=cache_len)
+        if nc:
+            new_caches[key] = nc
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _run_encoder(params, cfg, frontend_embeds):
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    x = frontend_embeds.astype(DTYPE)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                           x.shape[:2])
+
+    def enc_layer(x, lp):
+        h = rmsnorm(lp["norm1"], x)
+        a_out = A.plain_attention(
+            *(A._project(lp["attn"], h, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                         pos, cfg.rope_theta)), causal=False)
+        x = x + a_out.reshape(*x.shape[:2], -1) @ lp["attn"]["wo"]
+        h2 = rmsnorm(lp["norm2"], x)
+        return x + mlp(lp["mlp"], h2), None
+
+    x, _ = jax.lax.scan(lambda c, lp: enc_layer(c, lp), x, params["encoder"])
+    return rmsnorm(params["enc_norm"], x)
+
+
+def forward(params, cfg, tokens, *, mode="train", frontend_embeds=None,
+            positions=None):
+    """tokens: (B,S) int32.  Returns (logits, caches, aux)."""
+    x = embed(params["embed"], tokens)
+    if cfg.vision_patches and frontend_embeds is not None:
+        # VLM stub: patch embeddings replace the first `vision_patches` slots
+        x = jnp.concatenate(
+            [frontend_embeds.astype(DTYPE), x[:, cfg.vision_patches:]], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape)
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _run_encoder(params, cfg, frontend_embeds)
+
+    def period(x_carry, stage_params):
+        ekv = None
+        if cfg.enc_layers:
+            # project encoder output into this stage's cross-KV
+            key = next(k for k in stage_params if k.endswith("cross"))
+            ekv = A.encode_cross_kv(stage_params[key]["xattn"], enc_out, cfg)
+        x_new, _, aux = _period_fn(stage_params, x_carry, positions, cfg,
+                                   mode=mode, enc_kv=ekv)
+        return x_new, aux
+
+    period_remat = jax.checkpoint(period)
+    x, auxs = jax.lax.scan(lambda c, sp: period_remat(c, sp), x,
+                           params["stages"])
+    aux_total = jnp.sum(auxs)
+    for i, kind in enumerate(tail_pattern(cfg)):
+        x, _, aux = _apply_block(params["tail"][f"t{i}_{kind}"], kind, x,
+                                 positions, cfg, mode=mode)
+        aux_total = aux_total + aux
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], x)
+    return logits, None, aux_total
+
+
+def loss_fn(params, cfg, batch):
+    logits, _, aux = forward(params, cfg, batch["tokens"], mode="train",
+                             frontend_embeds=batch.get("frontend_embeds"))
+    loss = softmax_xent(logits[:, :-1], batch["labels"][:, 1:],
+                        batch.get("mask"))
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg, tokens, max_len: int, *, frontend_embeds=None):
+    """Process the prompt, returning (last-token logits, cache).
+
+    The period scan emits each stage's cache as a ys output, giving the same
+    stage-stacked cache layout `init_cache` declares.
+    """
+    x = embed(params["embed"], tokens)
+    if cfg.vision_patches and frontend_embeds is not None:
+        x = jnp.concatenate(
+            [frontend_embeds.astype(DTYPE), x[:, cfg.vision_patches:]], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape)
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _run_encoder(params, cfg, frontend_embeds)
+
+    def period(x_carry, stage_params):
+        ekv = None
+        if cfg.enc_layers:
+            key = next(k for k in stage_params if k.endswith("cross"))
+            ekv = A.encode_cross_kv(stage_params[key]["xattn"], enc_out, cfg)
+        x_new, caches, _ = _period_fn(stage_params, x_carry, positions, cfg,
+                                      mode="prefill", enc_kv=ekv,
+                                      cache_len=max_len)
+        return x_new, caches
+
+    x, stage_caches = jax.lax.scan(period, x, params["stages"])
+    tail_caches = {}
+    for i, kind in enumerate(tail_pattern(cfg)):
+        key = f"t{i}_{kind}"
+        x, nc, _ = _apply_block(params["tail"][key], kind, x, positions, cfg,
+                                mode="prefill", cache_len=max_len)
+        tail_caches[key] = nc
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], x[:, -1:])
+    caches = {"stages": stage_caches}
+    if tail_caches:
+        caches["tail"] = tail_caches
+    return logits, caches
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Cache pytree matching the stage scan layout (leading stage dim)."""
+    def cache_for(kind, key_prefix, i):
+        kk = f"{key_prefix}{i}_{kind}"
+        if kind in ("attn", "attn_moe", "cross"):
+            t = min(max_len, cfg.max_seq)
+            c = {"attn": {
+                "k": jnp.zeros((batch, t, cfg.n_kv, cfg.head_dim), DTYPE),
+                "v": jnp.zeros((batch, t, cfg.n_kv, cfg.head_dim), DTYPE),
+                "len": jnp.zeros((batch,), jnp.int32)}}
+            if kind == "cross":
+                c["xattn"] = {
+                    "k": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv,
+                                    cfg.head_dim), DTYPE),
+                    "v": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv,
+                                    cfg.head_dim), DTYPE)}
+            return kk, c
+        if kind == "attn_local":
+            t = min(max_len, cfg.window)
+            return kk, {"attn": {
+                "k": jnp.zeros((batch, t, cfg.n_kv, cfg.head_dim), DTYPE),
+                "v": jnp.zeros((batch, t, cfg.n_kv, cfg.head_dim), DTYPE),
+                "len": jnp.zeros((batch,), jnp.int32)}}
+        if kind == "rglru":
+            return kk, {"rglru": RG.init_rglru_cache(batch, cfg.d_model)}
+        if kind == "ssd":
+            return kk, {"ssd": SSD.init_ssd_cache(batch, cfg)}
+        raise ValueError(kind)
+
+    one = dict(cache_for(kind, "b", i) for i, kind in enumerate(cfg.pattern))
+    caches = {"stages": jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), one)}
+    tail = tail_pattern(cfg)
+    if tail:
+        caches["tail"] = dict(cache_for(kind, "t", i)
+                              for i, kind in enumerate(tail))
+    return caches
+
+
+def cache_axes(cfg):
+    """Logical sharding axes for the cache pytree (mirrors init_cache).
+
+    KV heads shard over the model axis when divisible (pruned otherwise —
+    MQA caches fall back to batch sharding); SSD/RG-LRU states shard their
+    head/feature dims.
+    """
+    def axes_for(kind):
+        if kind in ("attn", "attn_moe", "attn_local", "cross"):
+            c = {"attn": {"k": ("kv_batch", "kv_seq", "kv_heads", None),
+                          "v": ("kv_batch", "kv_seq", "kv_heads", None),
+                          "len": ("kv_batch",)}}
+            if kind == "cross":
+                c["xattn"] = {"k": ("kv_batch", None, "kv_heads", None),
+                              "v": ("kv_batch", None, "kv_heads", None)}
+            return c
+        if kind == "rglru":
+            return {"rglru": {"conv": ("kv_batch", None, "mlp"),
+                              "h": ("kv_batch", "mlp")}}
+        if kind == "ssd":
+            return {"ssd": {"conv": ("kv_batch", None, None),
+                            "h": ("kv_batch", "heads", None, None)}}
+        raise ValueError(kind)
+
+    stage = {f"b{i}_{kind}": jax.tree.map(
+        lambda t: ("stage",) + t, axes_for(kind),
+        is_leaf=lambda x: isinstance(x, tuple))
+        for i, kind in enumerate(cfg.pattern)}
+    out = {"stages": stage}
+    tail = tail_pattern(cfg)
+    if tail:
+        out["tail"] = {f"t{i}_{kind}": axes_for(kind)
+                       for i, kind in enumerate(tail)}
+    return out
+
+
+def decode_step(params, cfg, cache, tokens, positions):
+    """One serve step.  tokens: (B,1); positions: (B,1) absolute positions.
+
+    Returns (logits (B,1,V), new_cache).  The stage scan threads the cache.
+    """
+    x = embed(params["embed"], tokens)
+
+    def period(x_carry, scan_in):
+        stage_params, stage_cache = scan_in
+        x_new, new_cache, _ = _period_fn(stage_params, x_carry, positions,
+                                         cfg, mode="decode",
+                                         stage_cache=stage_cache,
+                                         enc_kv=None)
+        return x_new, new_cache
+
+    x, new_stage_caches = jax.lax.scan(period, x,
+                                       (params["stages"], cache["stages"]))
+    new_caches = {"stages": new_stage_caches}
+    if "tail" in cache:
+        new_tail = {}
+        for i, kind in enumerate(tail_pattern(cfg)):
+            key = f"t{i}_{kind}"
+            x, nc, _ = _apply_block(params["tail"][key], kind, x, positions,
+                                    cfg, mode="decode", cache=cache["tail"][key])
+            new_tail[key] = nc
+        new_caches["tail"] = new_tail
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], x)
+    return logits, new_caches

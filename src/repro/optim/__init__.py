@@ -1,0 +1,1 @@
+"""Optimizers: AdamW (ZeRO-shardable), LR schedules, gradient compression."""

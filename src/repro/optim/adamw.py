@@ -1,0 +1,70 @@
+"""AdamW with f32 master weights and ZeRO-shardable state.
+
+Parameters may live in bf16; the optimizer keeps f32 master copies and
+moments.  State sharding is declared through `state_axes` (same logical axes
+as the parameters), so pjit shards m/v/master over the full mesh — ZeRO-1/2
+is a sharding-rule choice, not a code path (see parallel.sharding and the
+dry-run, which verifies the 314B-param grok state fits per-device HBM).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+    master: dict
+
+
+def init(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=f32(params),
+        v=f32(params),
+        master=jax.tree.map(lambda x: x.astype(jnp.float32), params),
+    )
+
+
+def state_axes(param_axes_tree) -> AdamWState:
+    """Sharding specs for every state leaf (ZeRO: same layout as params).
+    Expects a tree of PartitionSpecs (from parallel.sharding.param_specs)."""
+    from jax.sharding import PartitionSpec as P
+
+    return AdamWState(step=P(), m=param_axes_tree, v=param_axes_tree,
+                      master=param_axes_tree)
+
+
+def update(state: AdamWState, grads, params, *, lr, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        w_new = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+        return m_new, v_new, w_new
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, AdamWState(step, m, v, master), {"grad_norm": gnorm}

@@ -1,0 +1,1 @@
+"""Parallelism: logical sharding rules, pipeline parallelism."""

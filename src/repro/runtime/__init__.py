@@ -1,0 +1,1 @@
+"""Runtime: trainer, server, straggler mitigation, elastic scaling."""

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: reduced same-family configs run a real
+forward + train step (and a prefill->decode handoff) on CPU, asserting output
+shapes and the absence of NaNs.  The FULL configs are exercised only via the
+dry-run (launch/dryrun.py, ShapeDtypeStruct — no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core  # noqa: F401  (x64 on; models are dtype-explicit)
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import transformer as TF
+from repro.models.layers import DTYPE
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.vision_patches:
+        batch["frontend_embeds"] = jnp.ones(
+            (B, cfg.vision_patches, cfg.d_model), DTYPE) * 0.01
+    if cfg.enc_layers:
+        batch["frontend_embeds"] = jnp.ones(
+            (B, cfg.enc_frames, cfg.d_model), DTYPE) * 0.01
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = TF.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+
+    logits, _, aux = jax.jit(
+        lambda p, b: TF.forward(p, cfg, b["tokens"], mode="train",
+                                frontend_embeds=b.get("frontend_embeds"))
+    )(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+    def train_step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda q: TF.loss_fn(q, cfg, b), has_aux=True)(p)
+        new = jax.tree.map(lambda a, g: a - 0.01 * g.astype(a.dtype), p, grads)
+        return loss, new
+
+    loss, new_params = jax.jit(train_step)(params, batch)
+    assert jnp.isfinite(loss)
+    # parameters actually move
+    delta = jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                            - b_.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_consistency(arch):
+    """Greedy decode after prefill matches teacher-forced forward logits."""
+    cfg = get_smoke_config(arch)
+    params = TF.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    toks = batch["tokens"]
+    fe = batch.get("frontend_embeds")
+
+    full_logits, _, _ = jax.jit(
+        lambda p, t: TF.forward(p, cfg, t, mode="train", frontend_embeds=fe)
+    )(params, toks)
+
+    cut = S // 2
+    pre_logits, cache = jax.jit(lambda p, t: TF.prefill(
+        p, cfg, t, max_len=S + 8, frontend_embeds=fe))(params, toks[:, :cut])
+    # prefill last-token logits == forward logits at position cut-1
+    assert jnp.allclose(pre_logits[:, 0].astype(jnp.float32),
+                        full_logits[:, cut - 1].astype(jnp.float32),
+                        atol=5e-2, rtol=5e-2), arch
+
+    # one decode step with the true next token matches position `cut`
+    step = jax.jit(lambda p, c, t, q: TF.decode_step(p, cfg, c, t, q))
+    logits, cache = step(params, cache, toks[:, cut:cut + 1],
+                         jnp.full((B, 1), cut, jnp.int32))
+    assert jnp.allclose(logits[:, 0].astype(jnp.float32),
+                        full_logits[:, cut].astype(jnp.float32),
+                        atol=5e-2, rtol=5e-2), arch
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact published dimensions."""
+    spec = {
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "mamba2-1.3b": (48, 2048, 1, 1, 0, 50280),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) \
+            == (L, d, h, kv, ff, v), arch
+    assert get_config("mamba2-1.3b").ssm_state == 128
+    assert get_config("qwen3-moe-30b-a3b").moe.n_experts == 128
+    assert get_config("qwen3-moe-30b-a3b").moe.top_k == 8
+    assert get_config("grok-1-314b").moe.n_experts == 8
+    assert get_config("grok-1-314b").moe.top_k == 2

@@ -1,0 +1,85 @@
+"""Schedule engine: exactness vs the event-driven oracle + conservation laws."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401
+from repro.core.engine import (Channels, Hops, channel_stats, request_stats,
+                               simulate, simulate_auto)
+from repro.core.ref_des import simulate_ref
+
+
+def _random_case(seed, with_rows=True, with_turnaround=True, zero_bytes=True):
+    rng = np.random.default_rng(seed)
+    n, h, c = int(rng.integers(3, 40)), int(rng.integers(1, 7)), int(rng.integers(1, 6))
+    bw = rng.integers(10, 100, c).astype(np.int64) * 1000
+    turn = (np.where(rng.random(c) < .5, rng.integers(100, 5000, c), 0)
+            if with_turnaround else np.zeros(c)).astype(np.int64)
+    rowm = np.zeros(c, bool)
+    if with_rows:
+        rowm[-1] = True
+    ch = Channels(jnp.asarray(bw), jnp.asarray(turn),
+                  jnp.asarray(np.where(rowm, 1000, 0).astype(np.int64)),
+                  jnp.asarray(np.where(rowm, 9000, 0).astype(np.int64)))
+    chan = rng.integers(0, c, (n, h)).astype(np.int32)
+    nbytes = rng.integers(1, 300, (n, h)).astype(np.int64)
+    if zero_bytes:
+        nbytes = np.where(rng.random((n, h)) < 0.2, 0, nbytes)
+    dirn = rng.integers(0, 2, (n, h)).astype(np.int8)
+    row = np.where((chan == c - 1) & rowm[-1],
+                   rng.integers(0, 3, (n, h)), -1).astype(np.int32)
+    fixed = rng.integers(0, 2000, (n, h)).astype(np.int64)
+    valid = rng.random((n, h)) < .85
+    issue = np.sort(rng.integers(0, 5000, n)).astype(np.int64)
+    hops = Hops(jnp.asarray(chan), jnp.asarray(nbytes), jnp.asarray(dirn),
+                jnp.asarray(row), jnp.asarray(fixed), jnp.asarray(valid),
+                jnp.asarray(valid))
+    return hops, ch, issue, valid
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_engine_exact_vs_oracle(seed):
+    hops, ch, issue, valid = _random_case(seed)
+    sched = simulate(hops, ch, jnp.asarray(issue))
+    ref = simulate_ref(hops, ch, issue)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    assert np.array_equal(np.asarray(sched.depart)[valid],
+                          ref["depart"][valid])
+
+
+def test_simulate_auto_oracle_fallback_matches():
+    hops, ch, issue, _ = _random_case(7)
+    # force the fallback by allowing a single round
+    sched, used_oracle = simulate_auto(hops, ch, jnp.asarray(issue),
+                                       max_rounds=1)
+    ref = simulate_ref(hops, ch, issue)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+
+
+def test_channel_conservation():
+    """No channel is busy more than wall-clock; payload time <= busy time."""
+    hops, ch, issue, _ = _random_case(3)
+    sched = simulate(hops, ch, jnp.asarray(issue))
+    stats = channel_stats(hops, sched, ch)
+    assert float(jnp.max(stats["utility"])) <= 1.0 + 1e-9
+    assert np.all(np.asarray(stats["payload_ps"])
+                  <= np.asarray(stats["busy_ps"]))
+
+
+def test_latency_positive_and_fcfs_order():
+    hops, ch, issue, valid = _random_case(11)
+    sched = simulate(hops, ch, jnp.asarray(issue))
+    r = request_stats(hops, sched, jnp.asarray(issue),
+                      jnp.asarray(np.full(len(issue), 64)),
+                      jnp.asarray(np.ones(len(issue), bool)))
+    lat = np.asarray(r["latency_ps"])
+    assert (lat >= 0).all()
+    # starts never precede arrivals
+    st_ = np.asarray(sched.start)[valid]
+    ar = np.asarray(sched.arrive)[:, :-1][valid]
+    assert (st_ >= ar).all()

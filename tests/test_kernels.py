@@ -1,0 +1,174 @@
+"""Per-kernel correctness: shape/dtype sweeps, interpret-mode pallas vs the
+pure-jnp oracle, plus hypothesis property tests for the engine hotspot."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401  (x64)
+from repro.kernels.flash_attention.kernel import flash_attention_gqa
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.link_contention.kernel import segmented_depart
+from repro.kernels.link_contention.ops import depart_times
+from repro.kernels.link_contention.ref import segmented_depart_ref
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,kv,g,s,d,qb,kb", [
+    (1, 2, 2, 256, 64, 128, 128),
+    (2, 1, 4, 128, 128, 64, 128),
+    (1, 4, 1, 512, 64, 256, 256),
+])
+def test_flash_attention_sweep(b, kv, g, s, d, qb, kb, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, kv, g, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), jnp.float32).astype(dtype)
+    out = flash_attention_gqa(q, k, v, causal=True, q_blk=qb, kv_blk=kb,
+                              interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_windowed():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    out = flash_attention_gqa(q, k, v, causal=True, window=64,
+                              q_blk=128, kv_blk=128, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_ops_matches_model_layout():
+    """The ops wrapper reproduces models.attention.plain_attention."""
+    from repro.models.attention import plain_attention
+    ks = jax.random.split(jax.random.key(2), 3)
+    b, s, h, kvh, d = 2, 128, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, impl="interpret",
+                          q_blk=64, kv_blk=64)
+    ref = plain_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d,chunk", [(2, 128, 64, 32), (1, 512, 256, 256),
+                                         (3, 64, 128, 64)])
+def test_rglru_scan_sweep(b, s, d, chunk):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.8, 0.999, (b, s, d)).astype(np.float32))
+    bb = jnp.asarray(rng.normal(0, 0.1, (b, s, d)).astype(np.float32))
+    out = rglru_scan_pallas(a, bb, chunk=chunk, d_blk=min(d, 512),
+                            interpret=True)
+    ref = rglru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_rglru_matches_model_block_semantics():
+    """Kernel oracle == sequential recurrence (exact per-step check)."""
+    rng = np.random.default_rng(1)
+    b, s, d = 1, 37, 8
+    a = rng.uniform(0.5, 0.99, (b, s, d)).astype(np.float32)
+    bb = rng.normal(0, 1, (b, s, d)).astype(np.float32)
+    ref = rglru_scan_ref(jnp.asarray(a), jnp.asarray(bb))
+    h = np.zeros((b, d), np.float32)
+    for t in range(s):
+        h = a[:, t] * h + bb[:, t]
+        np.testing.assert_allclose(np.asarray(ref[:, t]), h, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 2, 32, 32, 64), (2, 256, 4, 64, 128, 128), (1, 64, 1, 16, 64, 32),
+])
+def test_ssd_chunk_sweep(b, s, h, p, n, chunk):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (b, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, h)).astype(np.float32))
+    al = jnp.asarray(np.log(rng.uniform(1, 8, h)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(0, 1, (b, s, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(0, 1, (b, s, n)).astype(np.float32))
+    out = ssd_chunk_pallas(x, dt, al, bm, cm, chunk=chunk, interpret=True)
+    ref = ssd_chunk_ref(x, dt, al, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=3e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size must not change the result (state handoff exactness)."""
+    rng = np.random.default_rng(2)
+    b, s, h, p, n = 1, 256, 2, 16, 32
+    x = jnp.asarray(rng.normal(0, 1, (b, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, h)).astype(np.float32))
+    al = jnp.asarray(np.log(rng.uniform(1, 8, h)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(0, 1, (b, s, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(0, 1, (b, s, n)).astype(np.float32))
+    y64 = ssd_chunk_ref(x, dt, al, bm, cm, chunk=64)
+    y256 = ssd_chunk_ref(x, dt, al, bm, cm, chunk=256)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y256), atol=2e-4,
+                               rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# link contention (engine hotspot)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 12), st.integers(5, 400), st.integers(0, 2 ** 20),
+       st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_link_contention_property(nseg, k, tmax, seed):
+    """Pallas blocked scan == sequential recurrence, exactly, for any sorted
+    stream (hypothesis-driven)."""
+    rng = np.random.default_rng(seed)
+    chan = np.sort(rng.integers(0, nseg, k)).astype(np.int32)
+    arrive = rng.integers(0, max(tmax, 1), k).astype(np.int32)
+    order = np.lexsort((arrive, chan))
+    chan, arrive = chan[order], arrive[order]
+    ser = rng.integers(0, 1000, k).astype(np.int32)
+    out = segmented_depart(jnp.asarray(chan), jnp.asarray(arrive),
+                           jnp.asarray(ser), blk=128, interpret=True)
+    ref = segmented_depart_ref(jnp.asarray(chan), jnp.asarray(arrive),
+                               jnp.asarray(ser))
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_depart_times_int64_rebase():
+    rng = np.random.default_rng(3)
+    k = 500
+    chan = np.sort(rng.integers(0, 7, k)).astype(np.int64)
+    arrive = (rng.integers(0, 1 << 20, k) + (7 << 40)).astype(np.int64)
+    order = np.lexsort((arrive, chan))
+    chan, arrive = chan[order], arrive[order]
+    ser = rng.integers(0, 1000, k).astype(np.int64)
+    out = depart_times(jnp.asarray(chan), jnp.asarray(arrive),
+                       jnp.asarray(ser), impl="interpret")
+    ref = depart_times(jnp.asarray(chan), jnp.asarray(arrive),
+                       jnp.asarray(ser), impl="ref")
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert np.asarray(out).min() >= (7 << 40)

@@ -1,0 +1,65 @@
+"""Logical sharding rules: mesh pruning, divisibility pruning, fabric model."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.core  # noqa: F401
+from repro.core.autotune import DEFAULT_CANDIDATES, WorkloadDims, autotune
+from repro.core.fabric_model import (TPUFabric, analytic_ring_seconds,
+                                     predict_collective)
+from repro.parallel.sharding import (ShardingRules, prune_spec_for_shape)
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_prune_spec_divisibility():
+    mesh = _FakeMesh({"data": 16, "model": 16, "pod": 2})
+    # 51865 vocab doesn't divide 16 -> pruned; 4096 does -> kept
+    s = prune_spec_for_shape(P("model", "data"), (51865, 4096), mesh)
+    assert s == P(None, "data")
+    # batch=1 can't shard over ('pod','data')=32
+    s = prune_spec_for_shape(P(("pod", "data"), None), (1, 10), mesh)
+    assert s == P(None, None)
+    s = prune_spec_for_shape(P(("pod", "data"), None), (256, 10), mesh)
+    assert s == P(("pod", "data"), None)
+
+
+def test_rules_override():
+    r = ShardingRules().with_overrides(seq="model")
+    assert r.rules["seq"] == "model"
+    assert ShardingRules().rules["seq"] is None
+
+
+def test_fabric_ring_matches_alpha_beta():
+    fab = TPUFabric(nx=4, ny=4)
+    g = fab.build()
+    est = predict_collective(fab, g, "all_reduce", "x", 8 << 20)
+    ana = analytic_ring_seconds(8 << 20, 4)
+    assert abs(est.seconds - ana) / ana < 0.05
+
+
+def test_all_to_all_shows_contention():
+    fab = TPUFabric(nx=8, ny=8)
+    g = fab.build()
+    est = predict_collective(fab, g, "all_to_all", "x", 32 << 20)
+    naive = (32 << 20) / 8 * 7 / (50_000 * 1e6 * 2)
+    assert est.seconds > 1.5 * naive  # torus contention is real
+
+
+def test_autotune_filters_infeasible_and_ranks():
+    dims = WorkloadDims(n_layers=32, d_model=4096, d_ff=14336, n_heads=32,
+                        n_kv=8, head_dim=128, vocab=128256, batch=256,
+                        seq=4096)
+    scores = autotune(dims, TPUFabric(16, 16))
+    assert scores, "no feasible layout"
+    assert scores[0].step_s <= scores[-1].step_s
+    # ddp (unsharded state) must not be the winner for an 8B model
+    assert scores[0].layout.name != "ddp"

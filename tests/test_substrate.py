@@ -1,0 +1,180 @@
+"""Substrate: checkpointing, elastic scaling, stragglers, compression, data."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401
+from repro.checkpoint import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, SyntheticLM, TraceLM
+from repro.optim import adamw, grad_compress as gc, schedules
+from repro.runtime.elastic import choose_mesh, resize_plan
+from repro.runtime.straggler import (StragglerDetector, mitigation_decision)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (4, 8), jnp.float32),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jax.random.normal(k, (3,), jnp.float32)
+                       .astype(jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t)
+    restored, step = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: t))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_integrity_detects_corruption(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    payload = os.path.join(str(tmp_path), "step_000000001", "arrays.npz")
+    raw = bytearray(open(payload, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(payload, "wb").write(bytes(raw))
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), jax.eval_shape(_tree))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, _tree(), keep_last=2)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    kept = sorted(os.listdir(tmp_path))
+    assert len([d for d in kept if d.startswith("step_")]) == 2
+
+
+def test_checkpoint_async(tmp_path):
+    import time
+
+    ckpt.save(str(tmp_path), 9, _tree(), blocking=False)
+    for _ in range(100):
+        if ckpt.latest_step(str(tmp_path)) == 9:
+            break
+        time.sleep(0.05)
+    assert ckpt.latest_step(str(tmp_path)) == 9
+
+
+# ---------------------------------------------------------------------------
+# elastic
+# ---------------------------------------------------------------------------
+
+def test_choose_mesh_handles_odd_counts():
+    for n in (512, 500, 256, 130, 96, 7, 1):
+        plan = choose_mesh(n)
+        used = np.prod(plan.shape)
+        assert used == plan.usable_devices <= n
+        assert plan.dropped_devices == n - plan.usable_devices
+
+
+def test_resize_plan_roundtrip():
+    old = choose_mesh(512, prefer_pods=2)
+    plan = resize_plan(old, 256)
+    assert plan["action"] == "save_restore"
+    assert plan["new"].usable_devices == 256
+
+
+# ---------------------------------------------------------------------------
+# straggler
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector_flags_sustained_outliers():
+    det = StragglerDetector(patience=3)
+    verdicts = [det.observe(0, 1.0) for _ in range(20)]
+    assert all(v == "ok" for v in verdicts)
+    verdicts = [det.observe(1, 3.0) for _ in range(4)]
+    assert verdicts[-1] == "straggler"
+
+
+def test_mitigation_decision_thresholds():
+    assert mitigation_decision(1.01, 50, 1000) == "ignore"
+    assert mitigation_decision(1.04, 50, 1000) == "rebalance"
+    assert mitigation_decision(1.5, 50, 1000) == "checkpoint_evict"
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_error_feedback_converges():
+    """With error feedback, the accumulated compressed signal tracks the true
+    gradient sum (residual stays bounded)."""
+    key = jax.random.key(0)
+    g = jax.random.normal(key, (512,), jnp.float32) * 0.1
+    residual = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for i in range(30):
+        key, sub = jax.random.split(key)
+        payload, residual = gc.compress_with_feedback(g, residual, sub,
+                                                      method="int8")
+        total_sent = total_sent + gc.decompress(payload, "int8")
+    err = float(jnp.linalg.norm(total_sent - 30 * g) /
+                jnp.linalg.norm(30 * g))
+    assert err < 0.01, err
+    assert float(jnp.max(jnp.abs(residual))) < float(jnp.max(jnp.abs(g)))
+
+
+def test_topk_error_feedback_preserves_signal():
+    key = jax.random.key(1)
+    g = jax.random.normal(key, (1024,), jnp.float32)
+    residual = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for i in range(40):
+        key, sub = jax.random.split(key)
+        payload, residual = gc.compress_with_feedback(
+            g, residual, sub, method="topk", topk_frac=0.1)
+        sent = sent + gc.decompress(payload, "topk")
+    rel = float(jnp.linalg.norm(sent - 40 * g) / jnp.linalg.norm(40 * g))
+    assert rel < 0.2, rel  # residual bounded => error O(1/steps)
+
+
+# ---------------------------------------------------------------------------
+# optimizer + schedules + data
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    w = {"w": jnp.ones((16,), jnp.bfloat16)}
+    st = adamw.init(w)
+
+    def loss(p):
+        x = p["w"].astype(jnp.float32)
+        return jnp.sum((x - 3.0) ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(w)
+        w, st, _ = adamw.update(st, g, w, lr=0.05, weight_decay=0.0)
+    assert loss(w) < 0.2
+
+
+def test_schedule_shapes():
+    import numpy as np
+
+    s = np.array([schedules.warmup_cosine(jnp.int32(i), peak_lr=1.0,
+                                          warmup_steps=10, total_steps=100)
+                  for i in (0, 5, 10, 50, 100)])
+    assert s[0] == 0 and abs(s[2] - 1.0) < 1e-6 and s[4] <= 0.11
+
+
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(vocab=256, seq_len=32, global_batch=8, seed=3)
+    a = SyntheticLM(cfg, shard=0, n_shards=2).batch(5)
+    b = SyntheticLM(cfg, shard=0, n_shards=2).batch(5)
+    c = SyntheticLM(cfg, shard=1, n_shards=2).batch(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    assert a["tokens"].shape == (4, 32)
+    tr = TraceLM(cfg).batch(0)
+    assert tr["tokens"].shape == (8, 32)
+    assert int(tr["tokens"].max()) < 256

@@ -1,0 +1,99 @@
+"""Interconnect layer: routing correctness, PBR tables, builders."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401
+from repro.core import topology as T
+
+
+def _random_connected(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 14))
+    kinds = [T.SWITCH] * n
+    links = []
+    for i in range(1, n):  # random spanning tree
+        j = int(rng.integers(0, i))
+        links.append(T.LinkSpec(i, j, 64_000, 26_000))
+    for _ in range(int(rng.integers(0, n))):  # extra edges
+        a, b = rng.integers(0, n, 2)
+        if a != b:
+            links.append(T.LinkSpec(int(a), int(b), 64_000, 26_000))
+    return T.Topology(np.asarray(kinds, np.int64), links, name="rand")
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=40, deadline=None)
+def test_routes_reach_destination_and_are_shortest(seed):
+    topo = _random_connected(seed)
+    g = topo.build()
+    n = topo.n_nodes
+    # BFS distances as oracle
+    adj = {i: set() for i in range(n)}
+    for ls in topo.links:
+        adj[ls.a].add(ls.b)
+        adj[ls.b].add(ls.a)
+    for src in range(min(n, 5)):
+        dist = {src: 0}
+        frontier = [src]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in adj[u]:
+                    if v not in dist:
+                        dist[v] = dist[u] + 1
+                        nxt.append(v)
+            frontier = nxt
+        for dst in range(n):
+            path = g.route(src, dst)
+            assert path[0] == src and path[-1] == dst
+            assert len(path) - 1 == dist[dst]  # hop-count shortest
+            for u, v in zip(path[:-1], path[1:]):
+                assert v in adj[u]  # every hop is a real link
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=20, deadline=None)
+def test_pbr_table_consistent_with_routes(seed):
+    """Hop-by-hop forwarding via per-switch PBR tables reproduces the
+    interconnect layer's route (ESF: switches build tables from graph data)."""
+    topo = _random_connected(seed)
+    g = topo.build()
+    n = topo.n_nodes
+    rng = np.random.default_rng(seed)
+    for _ in range(5):
+        src, dst = rng.integers(0, n, 2)
+        node, hops = int(src), 0
+        while node != dst and hops <= n:
+            node = int(g.routing_table(node)[dst])
+            hops += 1
+        assert node == int(dst)
+        assert hops == g.hops(int(src), int(dst))
+
+
+@pytest.mark.parametrize("kind", list(T.TOPOLOGY_BUILDERS))
+def test_builders_wellformed(kind):
+    n_pairs = 8
+    topo = (T.spine_leaf(n_pairs, per_leaf=4) if kind == "spine_leaf"
+            else T.TOPOLOGY_BUILDERS[kind](n_pairs))
+    g = topo.build()
+    reqs, mems = topo.requesters(), topo.memories()
+    assert len(reqs) == n_pairs and len(mems) == n_pairs
+    for r in reqs:
+        for m in mems:
+            path = g.route(int(r), int(m))
+            assert path[0] == r and path[-1] == m
+            # endpoints only at the ends; interior is switches
+            assert all(topo.kinds[u] == T.SWITCH for u in path[1:-1])
+
+
+def test_route_alternatives_are_distinct_and_equal_cost():
+    topo = T.spine_leaf(8, n_spines=2, per_leaf=4)
+    g = topo.build()
+    r, m = int(topo.requesters()[0]), int(topo.memories()[0])
+    k = g.n_route_alternatives(r, m)
+    assert k >= 2
+    paths = {tuple(g.route(r, m, alt=a)) for a in range(k)}
+    assert len(paths) == k
+    assert len({len(p) for p in paths}) == 1  # equal cost

@@ -1,0 +1,92 @@
+"""Multiple-VCS switching (paper §II-B) + vmapped config sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import Channels, simulate
+from repro.core.vcs import LogicalDevice, MultiVCS
+from repro.core import topology as T
+
+
+def test_multivcs_default_binding_and_capacity():
+    v = MultiVCS(n_usp=2, devices=4, n_logical_per_device=2)
+    v.check_invariants()
+    # pooled capacity splits evenly by default
+    assert v.visible_capacity(0) + v.visible_capacity(1) == pytest.approx(4.0)
+
+
+def test_rebinding_moves_capacity_without_recabling():
+    v = MultiVCS(n_usp=2, devices=2, n_logical_per_device=2)
+    before = v.visible_capacity(0)
+    # software-compose: move every logical device to USP 0
+    for i in range(len(v.pool)):
+        v.bind(i, 0)
+    assert v.visible_capacity(0) == pytest.approx(2.0)
+    assert v.visible_capacity(0) > before
+    assert v.visible_capacity(1) == 0.0
+    topo, mapping = v.build_topology()
+    g = topo.build()
+    # USP 0's host reaches every logical device; USP 1's host reaches none
+    h0, h1 = mapping["hosts"]
+    for m in mapping["logical"]:
+        path = g.route(h0, m)
+        assert path[-1] == m
+        with pytest.raises(ValueError):
+            g.route(h1, m)
+
+
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 99))
+@settings(max_examples=15, deadline=None)
+def test_multivcs_invariants_under_random_rebinds(n_usp, n_log, seed):
+    rng = np.random.default_rng(seed)
+    v = MultiVCS(n_usp=n_usp, devices=3, n_logical_per_device=n_log)
+    for _ in range(10):
+        v.bind(int(rng.integers(0, len(v.pool))), int(rng.integers(0, n_usp)))
+    v.check_invariants()
+    total = sum(v.visible_capacity(u) for u in range(n_usp))
+    assert total == pytest.approx(3.0)
+    topo, mapping = v.build_topology()
+    g = topo.build()
+    for ld, m in zip(v.pool, mapping["logical"]):
+        assert g.route(mapping["hosts"][ld.bound_usp], m)[-1] == m
+
+
+def test_vmapped_bandwidth_sweep_monotone():
+    """The tensorized engine's vmap superpower (DESIGN.md §2a): sweep 16 bus
+    bandwidths in one call; makespan must fall monotonically with bandwidth
+    and every instance must converge."""
+    topo = T.single_bus(n_mems=4, bw_MBps=64_000)
+    g = topo.build()
+    spec = RequesterSpec(node=0, n_requests=200, targets=[2, 3, 4, 5],
+                         pattern="uniform", read_ratio=0.5,
+                         issue_interval_ps=300, seed=1)
+    wl = build_workload(g, [spec], header_bytes=16, warmup_frac=0.0)
+    bws = jnp.asarray(np.linspace(16_000, 128_000, 16).astype(np.int64))
+    svc = jnp.asarray(g.chan_is_service)
+
+    def one(bw):
+        ch = Channels(jnp.where(svc, wl.channels.bw_MBps, bw),
+                      wl.channels.turnaround_ps, wl.channels.row_hit_ps,
+                      wl.channels.row_miss_ps)
+        s = simulate(wl.hops, ch, wl.issue_ps, max_rounds=60)
+        return jnp.max(s.complete), s.converged
+
+    makespans, conv = jax.vmap(one)(bws)
+    assert bool(conv.all())
+    assert bool((jnp.diff(makespans) <= 0).all())
+
+
+def test_coherence_modes_dmc_wins():
+    """Paper §II-C: device-managed coherence out-scales host mediation."""
+    from benchmarks.bench_coherence_modes import run_mode
+
+    bw_db, lat_db = run_mode("hdm_db", 4, n_per=150)
+    bw_h, lat_h = run_mode("hdm_h", 4, n_per=150)
+    assert bw_db > 1.5 * bw_h
+    assert lat_h > 1.5 * lat_db
