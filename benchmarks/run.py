@@ -21,6 +21,7 @@ MODULES = (
     ("snoop_filter", "benchmarks.bench_snoop_filter"),
     ("invblk", "benchmarks.bench_invblk"),
     ("full_duplex", "benchmarks.bench_full_duplex"),
+    ("link_layer", "benchmarks.bench_link_layer"),
     ("traces", "benchmarks.bench_traces"),
     ("coherence_modes", "benchmarks.bench_coherence_modes"),
     ("fabric", "benchmarks.bench_fabric"),

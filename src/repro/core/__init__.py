@@ -10,12 +10,17 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from . import topology, engine, devices  # noqa: E402,F401
+from . import topology, engine, devices, link_layer  # noqa: E402,F401
 from .topology import (  # noqa: E402,F401
     REQUESTER, SWITCH, MEMORY,
     Topology, LinkSpec, EndpointSpec, FabricGraph,
-    chain, tree, ring, spine_leaf, fully_connected, single_bus,
+    chain, tree, ring, spine_leaf, fully_connected, single_bus, with_flit,
     TOPOLOGY_BUILDERS,
+)
+from .link_layer import (  # noqa: E402,F401
+    FlitConfig, FLIT_MODES, PCIE5_FLIT, PCIE6_FLIT,
+    flit_efficiency, goodput_efficiency, replay_overhead_ppm,
+    credit_limited_MBps,
 )
 from .engine import (  # noqa: E402,F401
     Channels, Hops, Schedule, simulate, simulate_auto, channel_stats, request_stats,

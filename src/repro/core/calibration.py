@@ -36,6 +36,27 @@ CAL = TableIII()
 PCIE5_X16_MBPS = 63_000
 # PCIe 6.0 x16 (CXL 3.1 target): 64 GT/s, PAM4 + FLIT -> ~121 GB/s/dir.
 PCIE6_X16_MBPS = 121_000
+# Pre-flit-framing lane rates for flit-mode links: core.link_layer models
+# the flit CRC/FEC overhead explicitly, so flit links are configured with
+# the rate *after* line encoding but *before* flit framing.  PCIe 6.0 PAM4
+# uses no 128b/130b encoding (64 GT/s * 16 / 8 b/B); PCIe 5.0 is NRZ with
+# 128b/130b, which link_layer does not model, so its encoding stays in.
+PCIE6_X16_RAW_MBPS = 128_000
+PCIE5_X16_RAW_MBPS = 63_015  # 32 GT/s * 16 / 8 b/B * 128/130
+
+# ---------------------------------------------------------------------------
+# FLIT link-layer geometry (Das Sharma, arXiv 2306.11227, Fig. 5/9)
+# ---------------------------------------------------------------------------
+# PCIe 6.0 / CXL 3.x 256 B flit: 236 B TLP + 6 B DLLP + 8 B CRC + 6 B FEC.
+FLIT256_SIZE_B = 256
+FLIT256_PAYLOAD_B = 236
+# PCIe 5 / CXL 2.0 68 B flit: four 16 B slots (64 B) + 2 B CRC + 2 B proto ID.
+FLIT68_SIZE_B = 68
+FLIT68_PAYLOAD_B = 64
+# Lightweight 3-way interleaved FEC decode latency (~2 ns per hop) and the
+# link-level Go-Back-N replay / credit-return loop latency.
+FEC_LATENCY_PS = 2 * NS
+CRC_REPLAY_RTT_PS = 100 * NS
 # One DDR5-4800 DIMM ~ 38.4 GB/s; the MXC expander and each NUMA node carry 4.
 DDR5_DIMM_MBPS = 38_400
 EXPANDER_MBPS = 4 * DDR5_DIMM_MBPS

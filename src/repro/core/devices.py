@@ -34,8 +34,27 @@ import numpy as np
 
 from .topology import FabricGraph, SWITCH
 from .engine import Channels, Hops, make_channels
+from . import link_layer
 
 HEADER_MODELS = ("esf", "symmetric")
+
+
+def packetize(header_model: str, write: bool, payload: int,
+              header_bytes: int) -> tuple[int, int, bool, bool]:
+    """Logical forward/backward packet bytes of one access (paper §V-D).
+
+    Returns (fwd_bytes, bwd_bytes, fwd_is_payload, bwd_is_payload).  Bytes
+    are *logical* TLP bytes; flit-mode channels quantize them to whole-flit
+    wire bytes during serialization (`link_layer` lowering contract), so the
+    byte-exact ``flit_mode="none"`` path is untouched.
+    """
+    if header_model == "esf":
+        fwd_b = payload if write else header_bytes
+        bwd_b = header_bytes if write else payload
+    else:  # symmetric: header on every packet, payload rides with data
+        fwd_b = header_bytes + (payload if write else 0)
+        bwd_b = header_bytes + (0 if write else payload)
+    return fwd_b, bwd_b, write, not write
 
 
 @dataclass
@@ -124,15 +143,37 @@ def build_workload(
     warmup_frac: float = 0.5,
     route_choice: np.ndarray | None = None,
     requester_overhead_ps: int = 22_000,   # Table III: 10 ns process + 12 ns cache
+    flit: "link_layer.FlitConfig | str | None" = None,
 ) -> Workload:
     """Expand requester traffic programs into engine hop tables.
 
     ``route_choice`` (optional, per-transaction int) selects among equal-cost
     route alternatives — the hook the adaptive routing strategy uses
     (see `core.routing.adaptive_schedule`).
+
+    ``flit`` overrides the link layer of every *link* channel (service
+    channels stay byte-exact) without rebuilding the graph: hop bytes are
+    emitted logically and the flit tables installed on ``Workload.channels``
+    quantize them to wire flits in the engine, while the per-hop FEC decode
+    latency is added to ``fixed_after`` here.  ``None`` defers to the flit
+    configs already carried by the graph's ``LinkSpec``s (which may also be
+    "none" — the seed's byte-exact path, bit-for-bit).  Passing any explicit
+    config (even "none") on a graph whose links already carry flit configs
+    raises: the graph's lowering is baked into its channel tables, so switch
+    modes by rebuilding the topology (`topology.with_flit`).
     """
     assert header_model in HEADER_MODELS
     ep = graph.topo.endpoint
+    flit_cfg = link_layer.normalize(flit)
+    if flit is not None and np.any(graph.chan_flit_size > 0):
+        # an active override would double-count FEC latency, and an explicit
+        # "none" cannot un-fold the FEC already baked into chan_fixed_ps —
+        # rebuild the topology (with_flit(topo, ...)) instead
+        raise ValueError(
+            "graph links already carry flit configs (LinkSpec.flit); "
+            "rebuild the topology with the desired flit mode (e.g. "
+            "with_flit(topo, ...)) instead of overriding at workload level")
+    flit_fec_ps = flit_cfg.fec_latency_ps if flit_cfg.active else 0
 
     rows: list[dict] = []
     tx = 0
@@ -173,21 +214,16 @@ def build_workload(
     for j, (r, path) in enumerate(zip(rows, paths)):
         write = r["write"]
         pay = r["payload"]
-        if header_model == "esf":
-            fwd_b = pay if write else header_bytes
-            bwd_b = header_bytes if write else pay
-            fwd_pay, bwd_pay = write, not write
-        else:  # symmetric: header on every packet, payload rides with data
-            fwd_b = header_bytes + (pay if write else 0)
-            bwd_b = header_bytes + (0 if write else pay)
-            fwd_pay, bwd_pay = write, not write
+        fwd_b, bwd_b, fwd_pay, bwd_pay = packetize(
+            header_model, write, pay, header_bytes)
         k = 0
         for u, v in zip(path[:-1], path[1:]):
             c, d = graph.edge_channel(u, v)
             channel[j, k] = c
             nbytes[j, k] = fwd_b
             direction[j, k] = d
-            fixed_after[j, k] = graph.chan_fixed_ps[c] + (sw_ps if graph.topo.kinds[v] == SWITCH else 0)
+            fixed_after[j, k] = (graph.chan_fixed_ps[c] + flit_fec_ps
+                                 + (sw_ps if graph.topo.kinds[v] == SWITCH else 0))
             is_payload[j, k] = fwd_pay
             valid[j, k] = True
             k += 1
@@ -210,7 +246,8 @@ def build_workload(
             channel[j, k] = c
             nbytes[j, k] = bwd_b
             direction[j, k] = d
-            fixed_after[j, k] = graph.chan_fixed_ps[c] + (sw_ps if graph.topo.kinds[v] == SWITCH else 0)
+            fixed_after[j, k] = (graph.chan_fixed_ps[c] + flit_fec_ps
+                                 + (sw_ps if graph.topo.kinds[v] == SWITCH else 0))
             is_payload[j, k] = bwd_pay
             valid[j, k] = True
             k += 1
@@ -221,9 +258,13 @@ def build_workload(
         fixed_after_ps=jnp.asarray(fixed_after),
         is_payload=jnp.asarray(is_payload), valid=jnp.asarray(valid),
     )
+    channels = make_channels(graph, ep.row_hit_extra_ps, ep.row_miss_extra_ps)
+    if flit_cfg.active:
+        channels = link_layer.apply_flit(
+            channels, ~graph.chan_is_service, flit_cfg)
     return Workload(
         hops=hops,
-        channels=make_channels(graph, ep.row_hit_extra_ps, ep.row_miss_extra_ps),
+        channels=channels,
         issue_ps=jnp.asarray(np.array([r["issue"] for r in rows], np.int64)),
         payload_bytes=jnp.asarray(np.array([r["payload"] for r in rows], np.int64)),
         measured=jnp.asarray(np.array([r["measured"] for r in rows], bool)),

@@ -51,13 +51,56 @@ def ser_ps(nbytes, bw_MBps):
     return (nbytes * 1_000_000) // bw_MBps
 
 
+def wire_ser_ps(nbytes, ch: "Channels", chan_clipped):
+    """Serialization time of ``nbytes`` logical bytes on their channels,
+    honouring the link-layer flit tables (`core.link_layer`):
+
+      * flit channels transmit whole flits — ceil(bytes/payload) * size wire
+        bytes — and stretch by the expected Go-Back-N CRC-replay overhead
+        ``(1 + replay_ppm/1e6)``, floored to exact integer picoseconds;
+      * byte-exact channels (flit_size 0, or seed-layout Channels with no
+        flit tables at all) keep the seed formula bit-for-bit.
+    """
+    bw = ch.bw_MBps[chan_clipped]
+    base = ser_ps(nbytes, bw)
+    if ch.flit_size is None:
+        return base
+    fsize = ch.flit_size[chan_clipped]
+    fpay = jnp.maximum(ch.flit_payload[chan_clipped], 1)
+    wire = ((nbytes + fpay - 1) // fpay) * fsize
+    fser = ser_ps(wire, bw)
+    if ch.replay_ppm is not None:
+        ppm = ch.replay_ppm[chan_clipped]
+        # floor(fser * (1e6 + ppm) / 1e6), decomposed so the product never
+        # exceeds int64 even with ppm at the MAX_REPLAY_PPM clamp (1e9):
+        # identical to the oracle's arbitrary-precision formula for any
+        # fser below ~9.2e15 ps
+        scale = 1_000_000 + ppm
+        q, r = fser // 1_000_000, fser % 1_000_000
+        fser = q * scale + (r * scale) // 1_000_000
+    return jnp.where(fsize > 0, fser, base)
+
+
 class Channels(NamedTuple):
-    """Static per-channel tables (from `FabricGraph`)."""
+    """Static per-channel tables (from `FabricGraph`).
+
+    The three optional flit tables are the link-layer lowering contract of
+    `core.link_layer`: a channel with ``flit_size > 0`` serializes whole
+    flits (``ceil(bytes / flit_payload) * flit_size`` wire bytes) and pays
+    the expected CRC-replay overhead ``replay_ppm`` (parts-per-million of
+    extra transmissions under Go-Back-N retry).  ``None`` — the seed layout —
+    or all-zero tables reproduce byte-exact serialization bit-for-bit.
+    Because they are plain per-channel arrays, BER / flit-mode sweeps
+    ``vmap`` over them without rebuilding hop tables.
+    """
 
     bw_MBps: jnp.ndarray        # (C,) int64
     turnaround_ps: jnp.ndarray  # (C,) int64, half-duplex direction-flip cost
     row_hit_ps: jnp.ndarray     # (C,) int64 extra when row matches
     row_miss_ps: jnp.ndarray    # (C,) int64 extra when row differs / cold
+    flit_size: jnp.ndarray | None = None     # (C,) int64, 0 = byte-exact
+    flit_payload: jnp.ndarray | None = None  # (C,) int64
+    replay_ppm: jnp.ndarray | None = None    # (C,) int64
 
 
 class Hops(NamedTuple):
@@ -101,7 +144,7 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
     s_dir = hops.direction.reshape(k)[order]
     s_row = hops.row.reshape(k)[order]
     s_bytes = hops.nbytes.reshape(k)[order]
-    s_ser = ser_ps(s_bytes, ch.bw_MBps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)])
+    s_ser = wire_ser_ps(s_bytes, ch, jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1))
     s_turn = ch.turnaround_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
     s_rowhit = ch.row_hit_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
     s_rowmiss = ch.row_miss_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
@@ -164,7 +207,8 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
     rounds = max_rounds if max_rounds > 0 else 3 * h + 8
 
     # contention-free lower bound initialization
-    ser0 = ser_ps(hops.nbytes, channels.bw_MBps[jnp.minimum(hops.channel, channels.bw_MBps.shape[0] - 1)])
+    ser0 = wire_ser_ps(hops.nbytes, channels,
+                       jnp.minimum(hops.channel, channels.bw_MBps.shape[0] - 1))
     step = jnp.where(hops.valid, ser0 + hops.fixed_after_ps, 0)
     arrive0 = issue_ps[:, None] + jnp.concatenate(
         [jnp.zeros((n, 1), jnp.int64), jnp.cumsum(step, axis=1)], axis=1
@@ -229,6 +273,11 @@ def channel_stats(hops: Hops, sched: Schedule, channels: Channels,
 
     bus utility (Fig. 17)        = busy / window, averaged over directions
     transmission efficiency      = payload transmit time / busy time
+
+    Payload time counts *logical* payload bytes while busy time is actual
+    wire occupancy, so on flit-mode channels (`core.link_layer`) efficiency
+    directly measures the flit packing fraction: a saturated stream of
+    fully packed 256 B flits reads 236/256, shrinking as CRC replays grow.
     """
     c = channels.bw_MBps.shape[0]
     busy_item = jnp.where(hops.valid, sched.depart - sched.start, 0)
@@ -291,13 +340,27 @@ def request_stats(hops: Hops, sched: Schedule, issue_ps: jnp.ndarray,
 
 
 def make_channels(graph, row_hit_ps: int = 0, row_miss_ps: int = 0) -> Channels:
-    """Lift a FabricGraph's channel tables into engine form."""
+    """Lift a FabricGraph's channel tables into engine form.
+
+    Graphs whose links carry a flit config (`topology.LinkSpec.flit`)
+    contribute the per-channel flit-mode tables; a graph with no flit links
+    lowers to the seed's 4-field layout so ``flit_mode="none"`` stays
+    structurally (and therefore jit-cache and bit-) identical.
+    """
     c = graph.n_channels
     rh = np.where(graph.chan_is_service, row_hit_ps, 0).astype(np.int64)
     rm = np.where(graph.chan_is_service, row_miss_ps, 0).astype(np.int64)
-    return Channels(
+    base = Channels(
         bw_MBps=jnp.asarray(graph.chan_bw_MBps),
         turnaround_ps=jnp.asarray(graph.chan_turnaround_ps),
         row_hit_ps=jnp.asarray(rh),
         row_miss_ps=jnp.asarray(rm),
+    )
+    fsize = getattr(graph, "chan_flit_size", None)
+    if fsize is None or not np.any(np.asarray(fsize) > 0):
+        return base
+    return base._replace(
+        flit_size=jnp.asarray(fsize),
+        flit_payload=jnp.asarray(graph.chan_flit_payload),
+        replay_ppm=jnp.asarray(graph.chan_replay_ppm),
     )

@@ -24,7 +24,7 @@ import numpy as np
 
 from . import engine
 from .engine import Channels, Hops, make_channels
-from .topology import MEMORY, REQUESTER, EndpointSpec, LinkSpec, Topology
+from .topology import REQUESTER, SWITCH, EndpointSpec, LinkSpec, Topology
 
 import jax.numpy as jnp
 
@@ -64,11 +64,11 @@ class TPUFabric:
                     if self.ny > 1:
                         links.append(LinkSpec(a, self.chip(p, x, y + 1),
                                               self.ici_MBps, ICI_HOP_PS))
-        # cross-pod DCN: per-chip NIC into a per-pod aggregation node pair
+        # cross-pod DCN: per-chip NIC into a per-pod aggregation switch
         if self.pods > 1:
             agg = []
             for p in range(self.pods):
-                kinds.append(MEMORY)  # placeholder kind; acts as a switch node
+                kinds.append(SWITCH)  # routes traffic, owns no endpoint
                 agg.append(n_chips + p)
             for p in range(self.pods):
                 for q in range(p + 1, self.pods):
@@ -81,15 +81,7 @@ class TPUFabric:
                                               self.dcn_MBps, DCN_RTT_PS // 4))
         topo = Topology(np.asarray(kinds, np.int64), links, name="tpu-fabric",
                         endpoint=EndpointSpec(bw_MBps=1, banks=1), switching_ps=0)
-        topo_kinds_switchfix(topo, n_chips)
         return topo.build()
-
-
-def topo_kinds_switchfix(topo: Topology, n_chips: int) -> None:
-    """Aggregation nodes route traffic; mark them switches (no endpoints)."""
-    from .topology import SWITCH
-
-    topo.kinds[n_chips:] = SWITCH
 
 
 def _transfer_hops(graph, pairs, nbytes):

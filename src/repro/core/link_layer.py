@@ -1,0 +1,282 @@
+"""PCIe 6.0 FLIT link layer: flit packing, FEC/CRC retry, credit flow control.
+
+The seed modeled the whole PCIe link layer as one bandwidth constant.  This
+module makes it a first-class subsystem, following Das Sharma's CXL
+interconnect overview (arXiv 2306.11227):
+
+  * **Flit packing** — PCIe 6.0 / CXL 3.x links carry fixed 256 B flits:
+    236 B of TLP payload plus 6 B DLLP, 8 B CRC and 6 B FEC check symbols.
+    PCIe 5 / CXL 2.0 links in CXL's 68 B flit mode carry 64 B slots with a
+    2 B CRC and 2 B protocol-ID header.  A logical packet of ``n`` bytes
+    therefore occupies ``ceil(n / payload) * size`` wire bytes.
+
+  * **Lightweight FEC + CRC retry** — the 3-way interleaved FEC of PCIe 6.0
+    adds a small fixed decode latency per hop (~2 ns).  Flits that fail CRC
+    after FEC are replayed link-level with Go-Back-N: the failed flit and
+    every flit in flight behind it retransmit.  Under a bit error rate
+    ``ber`` the per-flit error probability is ``1 - (1 - ber)^bits`` and the
+    expected transmissions per flit is ``(1 - p + p*W) / (1 - p)`` for a
+    replay window of ``W`` flits.  The *expected* overhead is folded into
+    serialization deterministically (as integer parts-per-million), which
+    keeps the engine exact and bit-reproducible and makes goodput a
+    monotone function of BER — what the sensitivity sweeps need.
+
+  * **Credit-based flow control** — the receiver grants ``rx_credits`` flit
+    buffers; the sender stalls when the in-flight window exceeds them.  A
+    credit loop of round-trip ``credit_rtt_ps`` therefore caps sustained
+    throughput at ``credits * flit_size / rtt`` regardless of raw lane
+    speed — the classic bandwidth-delay-product bound, applied as a
+    per-channel effective-bandwidth derate.
+
+Lowering contract: everything a flit link does to traffic is expressed as
+three per-channel integer tables (``flit_size``, ``flit_payload``,
+``replay_ppm``) consumed by ``core.engine`` / ``core.ref_des`` during
+serialization, plus an effective bandwidth and a fixed per-hop latency add.
+``flit_mode="none"`` produces empty tables and reproduces the seed's
+byte-exact schedules bit-for-bit.  Because the tables are plain arrays in
+``engine.Channels``, whole BER x bandwidth x flit-mode sweeps ``vmap`` in
+one jit (see ``kernels.flit_pack`` for the analytic-efficiency companion).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from .calibration import (CRC_REPLAY_RTT_PS, FEC_LATENCY_PS, FLIT68_PAYLOAD_B,
+                          FLIT68_SIZE_B, FLIT256_PAYLOAD_B, FLIT256_SIZE_B)
+
+PPM = 1_000_000
+# Ceiling on the expected Go-Back-N replay overhead: 1000x extra
+# transmissions per flit.  The expected-value model diverges as the flit
+# error probability approaches 1, but a real link retrains long before
+# that (see the lane-margining ROADMAP item); the clamp also keeps
+# replay_ppm within the flit_pack kernel's int32 tables, and the engine's
+# decomposed replay stretch (engine.wire_ser_ps) stays int64-exact with
+# ppm at this clamp for serializations up to ~9.2e15 ps.
+MAX_REPLAY_PPM = 1000 * PPM
+
+# mode -> (flit size on the wire, TLP payload bytes per flit)
+FLIT_GEOMETRY: dict[str, tuple[int, int]] = {
+    "none": (0, 0),
+    "flit68": (FLIT68_SIZE_B, FLIT68_PAYLOAD_B),      # PCIe 5 / CXL 2.0
+    "flit256": (FLIT256_SIZE_B, FLIT256_PAYLOAD_B),   # PCIe 6 / CXL 3.x
+}
+FLIT_MODES = tuple(FLIT_GEOMETRY)
+
+
+@dataclass(frozen=True)
+class FlitConfig:
+    """Link-layer configuration of one physical link (both directions).
+
+    mode            "none" (byte-exact seed semantics) | "flit68" | "flit256".
+    ber             residual bit error rate the CRC sees — i.e. *after* the
+                    lightweight FEC has corrected what it can (FEC escapes).
+                    Datasheet raw lane BERs (~1e-6 for PCIe 6.0) must be
+                    mapped through the FEC correction model first; residual
+                    rates are typically orders of magnitude lower.
+    rx_credits      receiver buffer, in flits, granted to the sender.  The
+                    default (256) covers the bandwidth-delay product of any
+                    realistic lane rate at the default credit RTT, so credit
+                    flow control only binds when a study shrinks it.
+    credit_rtt_ps   credit-return loop latency (propagation + DLLP processing).
+    retry_window    Go-Back-N replay window, in flits in flight.
+    fec_ps          per-hop FEC decode latency; None = mode default
+                    (lightweight FEC exists only in 256 B flit mode).
+    """
+
+    mode: str = "none"
+    ber: float = 0.0
+    rx_credits: int = 256
+    credit_rtt_ps: int = CRC_REPLAY_RTT_PS
+    retry_window: int = 16
+    fec_ps: int | None = None
+
+    def __post_init__(self):
+        if self.mode not in FLIT_GEOMETRY:
+            raise ValueError(f"unknown flit mode {self.mode!r}; "
+                             f"expected one of {FLIT_MODES}")
+        if not 0.0 <= self.ber < 1.0:
+            raise ValueError(f"ber {self.ber} out of [0, 1)")
+        if self.rx_credits < 1:
+            raise ValueError("rx_credits must be >= 1")
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "none"
+
+    @property
+    def geometry(self) -> tuple[int, int]:
+        return FLIT_GEOMETRY[self.mode]
+
+    @property
+    def fec_latency_ps(self) -> int:
+        if self.fec_ps is not None:
+            return self.fec_ps
+        return FEC_LATENCY_PS if self.mode == "flit256" else 0
+
+
+def normalize(flit: "FlitConfig | str | None") -> FlitConfig:
+    """Accept a FlitConfig, a mode string, or None (= byte-exact)."""
+    if flit is None:
+        return FlitConfig("none")
+    if isinstance(flit, str):
+        return FlitConfig(flit)
+    return flit
+
+
+# ---------------------------------------------------------------------------
+# Flit packing
+# ---------------------------------------------------------------------------
+
+def wire_bytes(nbytes, mode: str):
+    """Wire bytes of an ``nbytes`` logical packet: whole flits, incl. CRC/FEC.
+
+    Accepts scalars or numpy arrays.  ``mode="none"`` is the identity.
+    """
+    size, payload = FLIT_GEOMETRY[mode]
+    if size == 0:
+        return nbytes
+    return -(-np.asarray(nbytes) // payload) * size if np.ndim(nbytes) \
+        else -(-nbytes // payload) * size
+
+
+def flit_efficiency(mode: str) -> float:
+    """Analytic zero-BER payload fraction of a fully packed flit stream."""
+    size, payload = FLIT_GEOMETRY[mode]
+    return 1.0 if size == 0 else payload / size
+
+
+# ---------------------------------------------------------------------------
+# FEC/CRC retry (Go-Back-N replay, expected-value model)
+# ---------------------------------------------------------------------------
+
+def flit_error_prob(ber: float, mode: str) -> float:
+    """Probability one flit still fails CRC: 1 - (1-ber)^bits over the flit.
+
+    ``ber`` is the residual post-FEC rate (see FlitConfig), so the geometry
+    term is the whole flit (CRC covers every wire byte).
+    """
+    size, _ = FLIT_GEOMETRY[mode]
+    if size == 0 or ber <= 0.0:
+        return 0.0
+    return -math.expm1(8 * size * math.log1p(-ber))
+
+
+def replay_overhead_ppm(ber: float, mode: str, retry_window: int = 16) -> int:
+    """Expected *extra* transmissions per flit, in parts-per-million.
+
+    Go-Back-N with window W and flit error probability p retransmits, in
+    expectation, ``E - 1 = p * W / (1 - p)`` extra flits per delivered flit
+    (E = (1 - p + p*W)/(1 - p)).  Returned as an integer ppm so the engine
+    can fold it into serialization without leaving int64 arithmetic; the
+    divergence as p -> 1 is clamped at ``MAX_REPLAY_PPM`` (a link that bad
+    retrains rather than replaying forever).
+    """
+    p = flit_error_prob(ber, mode)
+    if p <= 0.0:
+        return 0
+    if p >= 1.0:
+        return MAX_REPLAY_PPM
+    return min(int(round(p * max(retry_window, 1) / (1.0 - p) * PPM)),
+               MAX_REPLAY_PPM)
+
+
+def goodput_efficiency(mode: str, ber: float = 0.0,
+                       retry_window: int = 16) -> float:
+    """Payload fraction of wire time including expected CRC replays."""
+    ppm = replay_overhead_ppm(ber, mode, retry_window)
+    return flit_efficiency(mode) / (1.0 + ppm / PPM)
+
+
+# ---------------------------------------------------------------------------
+# Credit-based flow control
+# ---------------------------------------------------------------------------
+
+def credit_limited_MBps(bw_MBps: int, cfg: FlitConfig) -> int:
+    """Sustained-rate cap from the credit loop: credits*flit_size per RTT.
+
+    With enough rx credits to cover the bandwidth-delay product this returns
+    ``bw_MBps`` unchanged; a shallow receiver buffer caps the link below its
+    lane rate (the knob the rx-buffer sizing studies sweep).
+    """
+    size, _ = cfg.geometry
+    if size == 0 or cfg.credit_rtt_ps <= 0:
+        return bw_MBps
+    # credits * size bytes per rtt ps -> MB/s: bytes * 1e12 / (rtt * 1e6)
+    cap = cfg.rx_credits * size * PPM // cfg.credit_rtt_ps
+    return min(bw_MBps, max(int(cap), 1))
+
+
+# ---------------------------------------------------------------------------
+# Lowering to engine channel tables
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LoweredLink:
+    """Per-direction channel entries a flit link contributes to the graph."""
+
+    eff_bw_MBps: int      # credit-capped serialization bandwidth
+    extra_fixed_ps: int   # FEC decode latency added to per-hop fixed latency
+    flit_size: int        # 0 = byte-exact channel
+    flit_payload: int
+    replay_ppm: int       # expected CRC-replay overhead (Go-Back-N)
+
+
+def lower_link(bw_MBps: int, flit: "FlitConfig | str | None") -> LoweredLink:
+    """Lower one link's flit config into engine channel-table entries."""
+    cfg = normalize(flit)
+    if not cfg.active:
+        return LoweredLink(bw_MBps, 0, 0, 0, 0)
+    size, payload = cfg.geometry
+    return LoweredLink(
+        eff_bw_MBps=credit_limited_MBps(bw_MBps, cfg),
+        extra_fixed_ps=cfg.fec_latency_ps,
+        flit_size=size,
+        flit_payload=payload,
+        replay_ppm=replay_overhead_ppm(cfg.ber, cfg.mode, cfg.retry_window),
+    )
+
+
+def apply_flit(channels, link_mask: np.ndarray, flit: "FlitConfig | str | None"):
+    """Override every masked channel of an engine ``Channels`` with ``flit``.
+
+    The workload-level override path (`devices.build_workload(flit=...)`):
+    returns a new Channels whose flit tables are set on link channels
+    (``link_mask`` true) and zero elsewhere (service channels stay
+    byte-exact).  ``flit=None``/"none" returns ``channels`` unchanged — the
+    seed's structurally identical byte-exact path.
+    """
+    import jax.numpy as jnp
+
+    from .engine import Channels
+
+    cfg = normalize(flit)
+    if not cfg.active:
+        return channels
+    size, payload = cfg.geometry
+    ppm = replay_overhead_ppm(cfg.ber, cfg.mode, cfg.retry_window)
+    mask = jnp.asarray(link_mask, bool)
+    bw = jnp.where(
+        mask,
+        jnp.minimum(channels.bw_MBps,
+                    credit_limited_MBps(1 << 40, cfg)),
+        channels.bw_MBps,
+    )
+    zeros = jnp.zeros_like(channels.bw_MBps)
+    return Channels(
+        bw_MBps=bw,
+        turnaround_ps=channels.turnaround_ps,
+        row_hit_ps=channels.row_hit_ps,
+        row_miss_ps=channels.row_miss_ps,
+        flit_size=jnp.where(mask, size, zeros),
+        flit_payload=jnp.where(mask, payload, zeros),
+        replay_ppm=jnp.where(mask, ppm, zeros),
+    )
+
+
+# Ready-made configurations for the paper's studied link generations.
+PCIE5_FLIT = FlitConfig(mode="flit68")
+PCIE6_FLIT = FlitConfig(mode="flit256")

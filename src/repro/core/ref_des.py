@@ -12,6 +12,9 @@ Semantics (must match `core.engine.simulate` bit-for-bit):
     item's on that channel, the channel frees `turnaround_ps` later;
   * row-managed channels (DRAM banks) add row_hit/row_miss extra occupancy
     depending on the previously accessed row (cold access counts as miss);
+  * flit-mode channels (`core.link_layer`) serialize whole flits —
+    ``ceil(bytes / flit_payload) * flit_size`` wire bytes — stretched by the
+    expected Go-Back-N CRC-replay factor ``(1 + replay_ppm/1e6)``, floored;
   * arrival at hop h+1 = departure at hop h + fixed_after[h].
 """
 
@@ -36,6 +39,21 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
     turn = np.asarray(channels.turnaround_ps)
     rhit = np.asarray(channels.row_hit_ps)
     rmiss = np.asarray(channels.row_miss_ps)
+    fsize = (np.asarray(channels.flit_size)
+             if channels.flit_size is not None else None)
+    fpay = (np.asarray(channels.flit_payload)
+            if channels.flit_payload is not None else None)
+    rppm = (np.asarray(channels.replay_ppm)
+            if channels.replay_ppm is not None else None)
+
+    def ser_time(nb: int, c: int) -> int:
+        if fsize is None or fsize[c] == 0:
+            return (nb * 1_000_000) // int(bw[c])
+        wire = -(-nb // max(int(fpay[c]), 1)) * int(fsize[c])
+        fser = (wire * 1_000_000) // int(bw[c])
+        if rppm is not None:
+            fser = (fser * (1_000_000 + int(rppm[c]))) // 1_000_000
+        return fser
 
     n, h = chan.shape
     arrive = np.zeros((n, h + 1), dtype=np.int64)
@@ -70,9 +88,7 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
         heapq.heappop(q)
         gap = int(turn[c]) if (last_dir != -1 and direction[p, hop] != last_dir) else 0
         st = max(arr, t_free + gap)
-        if gap and st < t_free + gap:
-            st = t_free + gap
-        ser = (int(nbytes[p, hop]) * 1_000_000) // int(bw[c])
+        ser = ser_time(int(nbytes[p, hop]), c)
         extra = 0
         r = int(row[p, hop])
         if r >= 0:

@@ -30,6 +30,9 @@ from typing import Sequence
 
 import numpy as np
 
+from . import link_layer
+from .link_layer import FlitConfig
+
 REQUESTER, SWITCH, MEMORY = 0, 1, 2
 KIND_NAMES = {REQUESTER: "requester", SWITCH: "switch", MEMORY: "memory"}
 
@@ -44,10 +47,17 @@ class LinkSpec:
     """One configured physical link between nodes ``a`` and ``b``.
 
     bw_MBps      serialization bandwidth per direction, in MB/s (1e6 bytes/s).
+                 For flit-mode links this is the lane rate after line
+                 encoding but before flit framing (`calibration.*_RAW_MBPS`);
+                 CRC/FEC flit overhead and credit caps are applied by
+                 `core.link_layer`.
     fixed_ps     per-traversal fixed latency in picoseconds (port delay +
                  propagation; ESF Table III: 25 ns port + 1 ns bus).
     duplex       "full" or "half".
     turnaround_ps  half-duplex direction-change penalty.
+    flit         link-layer config (`link_layer.FlitConfig`), a mode string
+                 ("none" | "flit68" | "flit256"), or None for the seed's
+                 byte-exact serialization.
     """
 
     a: int
@@ -56,6 +66,7 @@ class LinkSpec:
     fixed_ps: int
     duplex: str = FULL
     turnaround_ps: int = 0
+    flit: FlitConfig | str | None = None
 
 
 @dataclass(frozen=True)
@@ -122,8 +133,9 @@ class FabricGraph:
         kinds = topo.kinds
 
         # ---- channels ------------------------------------------------------
-        # channel arrays: bw, fixed, turnaround, is_service
+        # channel arrays: bw, fixed, turnaround, is_service + flit tables
         bw, fixed, turn, is_service = [], [], [], []
+        f_size, f_pay, f_ppm = [], [], []
         # directed edge lookup: (u, v) -> (channel, direction flag)
         self._edge: dict[tuple[int, int], tuple[int, int]] = {}
         self._adj: list[list[int]] = [[] for _ in range(n)]
@@ -131,22 +143,26 @@ class FabricGraph:
 
         for ls in topo.links:
             a, b = ls.a, ls.b
+            # link-layer lowering: credit-capped bandwidth, FEC latency into
+            # the per-traversal fixed cost, flit geometry + replay tables
+            low = link_layer.lower_link(ls.bw_MBps, ls.flit)
+            n_dirs = 2 if ls.duplex == FULL else 1
             if ls.duplex == FULL:
                 c0 = len(bw)
-                bw += [ls.bw_MBps, ls.bw_MBps]
-                fixed += [ls.fixed_ps, ls.fixed_ps]
                 turn += [0, 0]
-                is_service += [False, False]
                 self._edge[(a, b)] = (c0, 0)
                 self._edge[(b, a)] = (c0 + 1, 0)
             else:
                 c0 = len(bw)
-                bw += [ls.bw_MBps]
-                fixed += [ls.fixed_ps]
                 turn += [ls.turnaround_ps]
-                is_service += [False]
                 self._edge[(a, b)] = (c0, 0)
                 self._edge[(b, a)] = (c0, 1)
+            bw += [low.eff_bw_MBps] * n_dirs
+            fixed += [ls.fixed_ps + low.extra_fixed_ps] * n_dirs
+            is_service += [False] * n_dirs
+            f_size += [low.flit_size] * n_dirs
+            f_pay += [low.flit_payload] * n_dirs
+            f_ppm += [low.replay_ppm] * n_dirs
             self._adj[a].append(b)
             self._adj[b].append(a)
             cost = np.int64(ls.fixed_ps) + (1 << 20)  # hop-count dominant, latency tiebreak
@@ -163,11 +179,17 @@ class FabricGraph:
                 fixed.append(ep.fixed_ps)
                 turn.append(0)
                 is_service.append(True)
+                f_size.append(0)
+                f_pay.append(0)
+                f_ppm.append(0)
 
         self.chan_bw_MBps = np.asarray(bw, dtype=np.int64)
         self.chan_fixed_ps = np.asarray(fixed, dtype=np.int64)
         self.chan_turnaround_ps = np.asarray(turn, dtype=np.int64)
         self.chan_is_service = np.asarray(is_service, dtype=bool)
+        self.chan_flit_size = np.asarray(f_size, dtype=np.int64)
+        self.chan_flit_payload = np.asarray(f_pay, dtype=np.int64)
+        self.chan_replay_ppm = np.asarray(f_ppm, dtype=np.int64)
         self.n_channels = len(bw)
 
         # ---- all-pairs shortest paths (Floyd–Warshall w/ next-hop) ---------
@@ -380,6 +402,20 @@ def single_bus(n_mems: int = 4, bw_MBps: int = 64_000, fixed_ps: int = 26_000,
     for m in range(n_mems):
         links.append(LinkSpec(1, 2 + m, bw_MBps, fixed_ps, duplex, turnaround_ps))
     return _mk(kinds, links, f"bus{n_mems}", **kw)
+
+
+def with_flit(topo: Topology, flit: FlitConfig | str | None) -> Topology:
+    """Copy of ``topo`` with every physical link running the given flit
+    config — the one-liner that moves a whole fabric between byte-exact,
+    68 B-flit (PCIe 5 / CXL 2.0) and 256 B-flit (PCIe 6 / CXL 3.x) modes."""
+    from dataclasses import replace as _replace
+
+    return Topology(
+        topo.kinds.copy(),
+        [_replace(ls, flit=flit) for ls in topo.links],
+        name=topo.name, endpoint=topo.endpoint,
+        switching_ps=topo.switching_ps,
+    )
 
 
 TOPOLOGY_BUILDERS = {

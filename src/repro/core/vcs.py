@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .link_layer import FlitConfig
 from .topology import (MEMORY, REQUESTER, SWITCH, EndpointSpec, LinkSpec,
                        Topology)
 
@@ -54,6 +55,10 @@ class MultiVCS:
     fixed_ps: int = 26_000
     devices: int = 4
     pool: list[LogicalDevice] = field(default_factory=list)
+    # link layer of every vPPB link (host<->USP and DSP<->device): a
+    # FlitConfig / mode string moves the whole VCS between CXL 2.0 (68 B
+    # flits) and CXL 3.x (256 B flits); None keeps byte-exact seed semantics
+    flit: FlitConfig | str | None = None
 
     def __post_init__(self):
         if not self.pool:
@@ -106,7 +111,8 @@ class MultiVCS:
         hosts = [add(REQUESTER) for _ in range(self.n_usp)]
         vcs = [add(SWITCH) for _ in range(self.n_usp)]
         for h, s in zip(hosts, vcs):
-            links.append(LinkSpec(h, s, self.bw_MBps, self.fixed_ps))
+            links.append(LinkSpec(h, s, self.bw_MBps, self.fixed_ps,
+                                  flit=self.flit))
         mapping = {"hosts": hosts, "vcs": vcs, "logical": []}
         for ld in self.pool:
             if ld.bound_usp is None:
@@ -116,7 +122,8 @@ class MultiVCS:
             mapping["logical"].append(m)
             links.append(LinkSpec(
                 vcs[ld.bound_usp], m,
-                max(int(self.bw_MBps * ld.fraction), 1), self.fixed_ps))
+                max(int(self.bw_MBps * ld.fraction), 1), self.fixed_ps,
+                flit=self.flit))
         topo = Topology(np.asarray(kinds, np.int64), links, name="multi-vcs",
                         endpoint=EndpointSpec())
         return topo, mapping

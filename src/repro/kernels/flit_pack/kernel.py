@@ -1,0 +1,69 @@
+"""Vectorized flit packing / goodput-efficiency kernel (Pallas TPU).
+
+The link-layer design loop evaluates flit efficiency over large cross
+products — packet-size distribution x flit geometry x BER-derived replay
+overhead x credit config — before committing to a full schedule simulation.
+That evaluation is a pure elementwise map:
+
+    n_flits = ceil(payload / flit_payload)
+    wire    = n_flits * flit_size          (byte-exact channels: payload)
+    eff     = payload / (wire * (1 + replay_ppm/1e6))
+
+This kernel streams the flattened evaluation points through VMEM in 1-D
+blocks on the VPU (same layout discipline as `kernels.link_contention`).
+Integer ceil-division stays in int32 (Pallas TPU has no int64 path), so
+wire bytes are exact only while ``ceil(payload/flit_payload) * flit_size``
+fits int32 — payloads up to ``ops.MAX_PAYLOAD_B`` (~1.9 GB, far above any
+real TLP); the ops wrapper rejects larger inputs rather than wrapping.
+``ops.flit_sweep`` builds the cross product and ``vmap``s whole BER x
+bandwidth x flit-mode sweeps into one jit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PPM = 1_000_000
+
+
+def _flit_kernel(pay_ref, fsize_ref, fpay_ref, ppm_ref, wire_ref, eff_ref):
+    pay = pay_ref[...]
+    fsize = fsize_ref[...]
+    fpay = jnp.maximum(fpay_ref[...], 1)
+    ppm = ppm_ref[...]
+    n_flits = (pay + fpay - 1) // fpay
+    wire = jnp.where(fsize > 0, n_flits * fsize, pay)
+    wire_ref[...] = wire
+    scale = 1.0 + ppm.astype(jnp.float32) * (1.0 / PPM)
+    eff_ref[...] = pay.astype(jnp.float32) / jnp.maximum(
+        wire.astype(jnp.float32) * scale, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def flit_pack_pallas(payload, flit_size, flit_payload, replay_ppm, *,
+                     blk: int = 1024, interpret: bool = False):
+    """payload/flit_size/flit_payload/replay_ppm: (K,) int32 ->
+    (wire_bytes (K,) int32, efficiency (K,) float32)."""
+    k = payload.shape[0]
+    pad = (-k) % blk
+    args = [payload.astype(jnp.int32), flit_size.astype(jnp.int32),
+            flit_payload.astype(jnp.int32), replay_ppm.astype(jnp.int32)]
+    if pad:
+        args = [jnp.concatenate([a, jnp.zeros((pad,), jnp.int32)])
+                for a in args]
+    n = args[0].shape[0]
+    wire, eff = pl.pallas_call(
+        _flit_kernel,
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,)) for _ in range(4)],
+        out_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
+                   pl.BlockSpec((blk,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return wire[:k], eff[:k]

@@ -1,0 +1,82 @@
+"""Public flit-efficiency ops: mode/BER handling + whole-sweep dispatch.
+
+``flit_pack`` evaluates one array of packets under one link config;
+``flit_sweep`` builds the BER x flit-mode cross product the link-layer
+benches plot, entirely as arrays so the evaluation jits (and nests under
+an outer ``vmap`` over bandwidths or credit counts).  Off-TPU the pure-jnp
+oracle is used unless the Pallas interpreter is forced — same dispatch
+discipline as `kernels.link_contention.ops`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import link_layer
+
+from .kernel import flit_pack_pallas
+from .ref import flit_pack_ref
+
+# Largest payload whose wire bytes (ceil(p/236)*256, the worst expansion
+# ratio) still fit the kernel's int32 arithmetic; larger inputs would wrap
+# silently, so the public entry points reject them.
+MAX_PAYLOAD_B = 1_900_000_000
+
+
+def _check_payload(payload_bytes) -> None:
+    arr = np.asarray(payload_bytes)
+    if arr.size and int(arr.max()) > MAX_PAYLOAD_B:
+        raise ValueError(
+            f"payload {int(arr.max())} B exceeds MAX_PAYLOAD_B "
+            f"({MAX_PAYLOAD_B}); wire bytes would overflow the kernel's "
+            "int32 arithmetic")
+
+
+def _dispatch(payload, fsize, fpay, ppm, impl: str):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flit_pack_ref(payload, fsize, fpay, ppm)
+    return flit_pack_pallas(payload, fsize, fpay, ppm,
+                            interpret=(impl == "interpret"))
+
+
+def flit_pack(payload_bytes, mode: str = "flit256", ber: float = 0.0,
+              retry_window: int = 16, *, impl: str = "auto"):
+    """(wire_bytes, goodput_efficiency) of packets under one link config."""
+    _check_payload(payload_bytes)
+    pay = jnp.asarray(payload_bytes, jnp.int32)
+    size, fp = link_layer.FLIT_GEOMETRY[mode]
+    ppm = link_layer.replay_overhead_ppm(ber, mode, retry_window)
+    full = functools.partial(jnp.full_like, pay)
+    return _dispatch(pay, full(size), full(fp), full(ppm), impl)
+
+
+def flit_sweep(payload_bytes, modes, bers, retry_window: int = 16, *,
+               impl: str = "auto"):
+    """Mean goodput efficiency over a flit-mode x BER grid, in one dispatch.
+
+    payload_bytes: (K,) packet sizes (e.g. a workload's payload histogram).
+    Returns (M, B) float32 — rows follow ``modes``, columns follow ``bers``.
+    The whole grid is flattened into one kernel call: M*B*K evaluation
+    points streamed through VMEM, then reduced per cell.
+    """
+    _check_payload(payload_bytes)
+    pay = jnp.asarray(payload_bytes, jnp.int32)
+    k = pay.shape[0]
+    m, b = len(modes), len(bers)
+    size = np.empty((m, b), np.int32)
+    fp = np.empty((m, b), np.int32)
+    ppm = np.empty((m, b), np.int32)
+    for i, mode in enumerate(modes):
+        size[i, :], fp[i, :] = link_layer.FLIT_GEOMETRY[mode]
+        for j, ber in enumerate(bers):
+            ppm[i, j] = link_layer.replay_overhead_ppm(ber, mode, retry_window)
+    tile = lambda a: jnp.repeat(jnp.asarray(a.reshape(-1), jnp.int32), k)
+    pays = jnp.tile(pay, m * b)
+    _, eff = _dispatch(pays, tile(size), tile(fp), tile(ppm), impl)
+    return jnp.mean(eff.reshape(m * b, k), axis=1).reshape(m, b)

@@ -1,0 +1,30 @@
+"""Oracle for the flit-pack kernel: direct jnp elementwise evaluation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PPM = 1_000_000
+
+
+def flit_pack_ref(payload, flit_size, flit_payload, replay_ppm):
+    """Wire bytes + goodput efficiency of each packet (elementwise).
+
+    payload       (K,) int32 logical TLP bytes per packet
+    flit_size     (K,) int32 flit wire bytes; 0 = byte-exact channel
+    flit_payload  (K,) int32 TLP bytes per flit
+    replay_ppm    (K,) int32 expected extra CRC-replay transmissions (ppm)
+
+    Returns (wire_bytes int32, efficiency float32) where efficiency is
+    payload / (wire * (1 + ppm/1e6)) — the goodput fraction of wire time.
+    """
+    payload = payload.astype(jnp.int32)
+    fsize = flit_size.astype(jnp.int32)
+    fpay = jnp.maximum(flit_payload.astype(jnp.int32), 1)
+    ppm = replay_ppm.astype(jnp.int32)
+    n_flits = (payload + fpay - 1) // fpay
+    wire = jnp.where(fsize > 0, n_flits * fsize, payload)
+    scale = 1.0 + ppm.astype(jnp.float32) * (1.0 / PPM)
+    eff = payload.astype(jnp.float32) / jnp.maximum(
+        wire.astype(jnp.float32) * scale, 1.0)
+    return wire, eff

@@ -9,8 +9,9 @@ Each item is the affine-max map f_i(x) = max(arrive_i, x) + ser_i; maps
 compose as (c, m): f(x) = max(c, x + m), f2.f1 = (max(c2, c1+m2), m1+m2),
 with a reset at channel boundaries — a *segmented associative scan*.  The
 kernel processes the item stream in VMEM blocks: an intra-block Hillis–Steele
-scan over log2(block) shifted combines (VPU-vectorized), then a carried
-(c, m) composition across blocks in scratch (sequential grid).
+scan over log2(block) shifted combines (VPU-vectorized), then an absolute
+(depart, channel) carry across blocks in scratch (sequential grid; the
+carried map's m folds into c once departs are absolute).
 
 Times are int32 (the engine's int64 picoseconds are range-reduced by the ops
 wrapper before dispatch; exactness is preserved because one round's spans fit
@@ -32,13 +33,12 @@ NEG = -(2 ** 30)  # python int: keeps the kernel free of captured consts
 
 
 def _seg_kernel(chan_ref, arrive_ref, ser_ref, depart_ref,
-                carry_c, carry_m, carry_chan, *, blk: int, steps: int):
+                carry_c, carry_chan, *, blk: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         carry_c[...] = jnp.full_like(carry_c, NEG)
-        carry_m[...] = jnp.zeros_like(carry_m)
         carry_chan[...] = jnp.full_like(carry_chan, -1)
 
     chan = chan_ref[...]
@@ -62,8 +62,8 @@ def _seg_kernel(chan_ref, arrive_ref, ser_ref, depart_ref,
         k *= 2
 
     # compose with the inter-block carry where the first run continues it
+    # (the carry is an absolute depart time: m folds into c after the scan)
     cc = carry_c[0]
-    cm = carry_m[0]
     cchan = carry_chan[0]
     first_chan = chan[0]
     # items whose whole prefix (within block) is one run starting at item 0
@@ -76,7 +76,6 @@ def _seg_kernel(chan_ref, arrive_ref, ser_ref, depart_ref,
     # new carry = composed map of the trailing run of the block
     last_chan = chan[blk - 1]
     carry_c[0] = c[blk - 1]
-    carry_m[0] = 0   # depart is absolute after scan: m folds into c
     carry_chan[0] = last_chan
 
 
@@ -93,7 +92,7 @@ def segmented_depart(chan, arrive, ser, *, blk: int = 2048,
     n = chan.shape[0]
     steps = n // blk
     out = pl.pallas_call(
-        functools.partial(_seg_kernel, blk=blk, steps=steps),
+        functools.partial(_seg_kernel, blk=blk),
         grid=(steps,),
         in_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
                   pl.BlockSpec((blk,), lambda i: (i,)),
@@ -101,7 +100,6 @@ def segmented_depart(chan, arrive, ser, *, blk: int = 2048,
         out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         scratch_shapes=[pltpu.VMEM((1,), jnp.int32),
-                        pltpu.VMEM((1,), jnp.int32),
                         pltpu.VMEM((1,), jnp.int32)],
         interpret=interpret,
     )(chan, arrive, ser)

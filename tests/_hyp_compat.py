@@ -1,0 +1,76 @@
+"""Optional-hypothesis shim: property tests degrade gracefully when absent.
+
+The tier-1 suite must collect and run on a bare environment (satellite of
+the link-layer PR; `hypothesis` ships only in the ``[test]`` extra).  Test
+modules import ``given / settings / st`` from here instead of from
+hypothesis directly:
+
+  * with hypothesis installed, this re-exports the real thing;
+  * without it, ``@given`` expands into a deterministic
+    ``pytest.mark.parametrize`` over seeded draws from the (small) strategy
+    subset the suite uses — integers and sampled_from — so the
+    oracle-exactness properties still execute with real coverage instead of
+    being skipped wholesale.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by either environment
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as _np
+    import pytest as _pytest
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 8  # per test; deterministic, seeded below
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom:
+        def __init__(self, elems):
+            self.elems = list(elems)
+
+        def draw(self, rng):
+            return self.elems[int(rng.integers(0, len(self.elems)))]
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elems):
+            return _SampledFrom(elems)
+
+    def settings(**kwargs):
+        max_examples = kwargs.get("max_examples")
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._hyp_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_hyp_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+            rng = _np.random.default_rng(0xE5F)
+            cases = [tuple(s.draw(rng) for s in strategies) for _ in range(n)]
+
+            def wrapper(_hyp_case):
+                return fn(*_hyp_case)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return _pytest.mark.parametrize("_hyp_case", cases)(wrapper)
+
+        return deco

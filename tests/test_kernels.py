@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st  # optional-hypothesis shim
 
 import repro.core  # noqa: F401  (x64)
 from repro.kernels.flash_attention.kernel import flash_attention_gqa
