@@ -1,0 +1,204 @@
+"""Tail latency under stochastic link reliability (core.link_layer).
+
+The expected-value CRC-replay model (PR 1, `bench_link_layer`) is exact in
+the mean but structurally blind to tails: every packet pays the same
+deterministic stretch, so p99/p50 is flat in BER.  This bench runs the same
+§IV validation bus in ``reliability="stochastic"`` mode — seeded per-flit
+Go-Back-N replay counts plus retraining stalls sampled at build time — and
+reports what the deterministic model cannot express:
+
+  * **tail sweep** — p50/p99 request latency vs BER for both reliability
+    modes.  The stochastic p99-p50 spread must grow with BER (replay
+    bursts and retraining stalls land on unlucky packets) and overtake the
+    expected-value spread, which only widens with the uniform queueing
+    slowdown.  The per-flit sampling has the expected model as its mean,
+    but under saturation the stalls legitimately shift the whole
+    distribution, medians included.
+
+  * **zero-BER equivalence** — at BER 0 the sampled tables are all zero, so
+    the stochastic schedule must equal the deterministic one *exactly*
+    (acceptance gate).
+
+  * **retraining stalls** — with a retrain threshold, CRC-failure storms
+    drop a channel into microsecond link-down intervals (per-channel
+    ``down_until`` scan state).  Enabling retraining on the same seeded
+    fault history must strictly delay the makespan once any event fires.
+
+The stochastic sweep still runs as one vmapped jit: the sampled outcomes
+live in per-hop ``Hops`` tables (not channel tables), so per-BER samples
+stack along a leading axis over the same hop layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.calibration import PCIE6_X16_RAW_MBPS
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import simulate
+from repro.core.link_layer import (FlitConfig, broadcast_reliability_tables,
+                                   replay_overhead_ppm, sample_hop_tables)
+
+from .common import Row, Timer
+
+BERS = (0.0, 1e-6, 1e-5, 3e-5, 1e-4)
+RETRAIN_THRESHOLD = 2
+RETRAIN_PS = 1_000_000  # 1 us link-down per retraining event
+
+
+def _bus_workload(flit, n: int, payload: int = 944, seed: int = 11):
+    """§IV validation system, saturated open loop (944 B = 4 full flits)."""
+    topo = T.with_flit(T.single_bus(n_mems=4, bw_MBps=PCIE6_X16_RAW_MBPS),
+                       flit)
+    spec = RequesterSpec(node=0, n_requests=n, targets=[2, 3, 4, 5],
+                         pattern="uniform", read_ratio=0.5,
+                         issue_interval_ps=100, payload_bytes=payload,
+                         seed=seed)
+    return build_workload(topo.build(), [spec], header_bytes=64,
+                          warmup_frac=0.0)
+
+
+def _stochastic_cfg(ber: float, rel_seed: int = 0,
+                    retrain_threshold: int = RETRAIN_THRESHOLD) -> FlitConfig:
+    return FlitConfig("flit256", ber=ber, reliability="stochastic",
+                      rel_seed=rel_seed, retrain_threshold=retrain_threshold,
+                      retrain_ps=RETRAIN_PS)
+
+
+def run_tail_sweep(bers=BERS, n: int = 1500, rel_seed: int = 0,
+                   max_rounds: int = 160) -> list[dict]:
+    """Per BER: p50/p99 latency (ns) of the expected and stochastic modes.
+
+    Expected mode vmaps over the per-channel ``replay_ppm`` table; the
+    stochastic mode vmaps over the stacked per-hop sampled tables — both
+    sweeps are one jit each over an identical hop layout.
+    """
+    wl = _bus_workload(FlitConfig("flit256"), n)
+    link = jnp.asarray(np.asarray(wl.channels.flit_size) > 0)
+
+    def one_expected(ppm):
+        ch = wl.channels._replace(replay_ppm=jnp.where(link, ppm, 0))
+        s = simulate(wl.hops, ch, wl.issue_ps, max_rounds=max_rounds)
+        return s.complete, s.converged
+
+    ppms = jnp.asarray([replay_overhead_ppm(b, "flit256") for b in bers],
+                       jnp.int64)
+    comp_e, conv_e = jax.vmap(one_expected)(ppms)
+    assert bool(conv_e.all()), "expected-mode sweep failed to converge"
+
+    # stochastic: same hop layout per BER, only the sampled tables differ —
+    # sample them straight off the shared workload's arrays (identical
+    # streams to a per-BER build: same channel ids, seeds, and parameters)
+    c = int(wl.channels.bw_MBps.shape[0])
+    chan_np = np.asarray(wl.hops.channel)
+    nbytes_np = np.asarray(wl.hops.nbytes)
+    valid_np = np.asarray(wl.hops.valid)
+    link_np = np.asarray(wl.channels.flit_size) > 0
+    extras, retrains = [], []
+    for b in bers:
+        extra, retrain = sample_hop_tables(
+            chan_np, nbytes_np, valid_np,
+            **broadcast_reliability_tables(_stochastic_cfg(b, rel_seed), c,
+                                           link_np))
+        extras.append(extra)
+        retrains.append(retrain)
+    ch_s = wl.channels._replace(
+        replay_ppm=jnp.zeros_like(wl.channels.replay_ppm))
+
+    def one_stochastic(extra, retrain):
+        h = wl.hops._replace(extra_wire_bytes=extra, retrain_after_ps=retrain)
+        s = simulate(h, ch_s, wl.issue_ps, max_rounds=max_rounds)
+        return s.complete, s.converged
+
+    comp_s, conv_s = jax.vmap(one_stochastic)(
+        jnp.asarray(np.stack(extras)), jnp.asarray(np.stack(retrains)))
+    assert bool(conv_s.all()), "stochastic sweep failed to converge"
+
+    out = []
+    for i, b in enumerate(bers):
+        lat_e = (comp_e[i] - wl.issue_ps) / 1000
+        lat_s = (comp_s[i] - wl.issue_ps) / 1000
+        out.append({
+            "ber": b,
+            "expected_p50_ns": float(jnp.percentile(lat_e, 50)),
+            "expected_p99_ns": float(jnp.percentile(lat_e, 99)),
+            "stochastic_p50_ns": float(jnp.percentile(lat_s, 50)),
+            "stochastic_p99_ns": float(jnp.percentile(lat_s, 99)),
+        })
+    return out
+
+
+def run_zero_ber_equivalence(n: int = 800) -> bool:
+    """BER-0 stochastic schedule == deterministic schedule, bit for bit."""
+    wl_e = _bus_workload(FlitConfig("flit256"), n)
+    wl_s = _bus_workload(_stochastic_cfg(0.0), n)
+    s_e = simulate(wl_e.hops, wl_e.channels, wl_e.issue_ps, max_rounds=160)
+    s_s = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps, max_rounds=160)
+    return (np.array_equal(np.asarray(s_e.complete), np.asarray(s_s.complete))
+            and np.array_equal(np.asarray(s_e.start), np.asarray(s_s.start)))
+
+
+def run_retrain_stall(ber: float = 1e-4, n: int = 800,
+                      rel_seed: int = 0) -> dict:
+    """Makespan with vs without retraining on one seeded fault history.
+
+    Threshold 0 disables retraining but draws the replay totals from the
+    same stream, so the two runs share every sampled replay burst and
+    differ only by the link-down intervals.
+    """
+    wl_off = _bus_workload(_stochastic_cfg(ber, rel_seed,
+                                           retrain_threshold=0), n)
+    wl_on = _bus_workload(_stochastic_cfg(ber, rel_seed), n)
+    assert np.array_equal(np.asarray(wl_off.hops.extra_wire_bytes),
+                          np.asarray(wl_on.hops.extra_wire_bytes))
+    s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps,
+                     max_rounds=160)
+    s_on = simulate(wl_on.hops, wl_on.channels, wl_on.issue_ps,
+                    max_rounds=160)
+    events = int((np.asarray(wl_on.hops.retrain_after_ps) > 0).sum())
+    down_ns = int(np.asarray(wl_on.hops.retrain_after_ps).sum()) / 1000
+    return {
+        "events": events,
+        "down_ns_total": down_ns,
+        "makespan_off_ns": int(jnp.max(s_off.complete)) / 1000,
+        "makespan_on_ns": int(jnp.max(s_on.complete)) / 1000,
+    }
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    n = 500 if quick else 1500
+
+    with Timer() as t:
+        ok = run_zero_ber_equivalence(min(n, 800))
+    rows.append(Row("link_reliability/zero_ber_equivalence", t.us,
+                    f"stochastic_matches_deterministic={ok}"))
+
+    with Timer() as t:
+        sweep = run_tail_sweep(BERS[:3] if quick else BERS, n=n)
+    for r in sweep:
+        rows.append(Row(f"link_reliability/tail/ber{r['ber']:g}", t.us,
+                        f"exp_p50={r['expected_p50_ns']:.0f};"
+                        f"exp_p99={r['expected_p99_ns']:.0f};"
+                        f"sto_p50={r['stochastic_p50_ns']:.0f};"
+                        f"sto_p99={r['stochastic_p99_ns']:.0f}"))
+    spread0 = sweep[0]["stochastic_p99_ns"] - sweep[0]["stochastic_p50_ns"]
+    spread1 = sweep[-1]["stochastic_p99_ns"] - sweep[-1]["stochastic_p50_ns"]
+    spread_e = sweep[-1]["expected_p99_ns"] - sweep[-1]["expected_p50_ns"]
+    rows.append(Row("link_reliability/tail_divergence", t.us,
+                    f"p99_minus_p50_ber0={spread0:.0f};"
+                    f"p99_minus_p50_top={spread1:.0f};"
+                    f"expected_top={spread_e:.0f};"
+                    f"diverges={spread1 > spread0 and spread1 > spread_e}"))
+
+    with Timer() as t:
+        st = run_retrain_stall(n=min(n, 800))
+    rows.append(Row("link_reliability/retrain_stall", t.us,
+                    f"events={st['events']};down_ns={st['down_ns_total']:.0f};"
+                    f"makespan_off={st['makespan_off_ns']:.0f};"
+                    f"makespan_on={st['makespan_on_ns']:.0f};"
+                    f"stalls={st['makespan_on_ns'] > st['makespan_off_ns']}"))
+    return rows

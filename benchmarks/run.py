@@ -22,6 +22,7 @@ MODULES = (
     ("invblk", "benchmarks.bench_invblk"),
     ("full_duplex", "benchmarks.bench_full_duplex"),
     ("link_layer", "benchmarks.bench_link_layer"),
+    ("link_reliability", "benchmarks.bench_link_reliability"),
     ("traces", "benchmarks.bench_traces"),
     ("coherence_modes", "benchmarks.bench_coherence_modes"),
     ("fabric", "benchmarks.bench_fabric"),

@@ -57,6 +57,11 @@ FLIT68_PAYLOAD_B = 64
 # link-level Go-Back-N replay / credit-return loop latency.
 FEC_LATENCY_PS = 2 * NS
 CRC_REPLAY_RTT_PS = 100 * NS
+# Link retraining (recovery) interval: when CRC replays storm past the retry
+# threshold the link drops to Recovery and re-equalizes — a microsecond-scale
+# stall during which the channel grants nothing (Das Sharma, arXiv 2306.11227
+# puts PCIe recovery in the us range; lane margining studies measure 1-10 us).
+LINK_RETRAIN_PS = 1_000 * NS
 # One DDR5-4800 DIMM ~ 38.4 GB/s; the MXC expander and each NUMA node carry 4.
 DDR5_DIMM_MBPS = 38_400
 EXPANDER_MBPS = 4 * DDR5_DIMM_MBPS

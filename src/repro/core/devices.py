@@ -134,6 +134,33 @@ def _interleave(addr: np.ndarray, targets: Sequence[int], policy: str) -> np.nda
     raise ValueError(f"unknown interleave policy {policy!r}")
 
 
+def _reliability_tables(graph: FabricGraph, override: link_layer.FlitConfig):
+    """Per-channel stochastic-sampling parameters, or None when every
+    channel runs the deterministic expected-value model.
+
+    Graph-carried flit configs (`LinkSpec.flit`) supply per-channel tables;
+    a workload-level override broadcasts one config over the link channels
+    (service channels never sample — they are byte-exact by contract).
+    """
+    if override.active:
+        if not override.stochastic:
+            return None
+        return link_layer.broadcast_reliability_tables(
+            override, graph.n_channels, ~graph.chan_is_service)
+    if not np.any(graph.chan_rel_stochastic):
+        return None
+    return dict(
+        stochastic=graph.chan_rel_stochastic,
+        err_p=graph.chan_flit_err_p,
+        flit_size=graph.chan_flit_size,
+        flit_payload=graph.chan_flit_payload,
+        retry_window=graph.chan_retry_window,
+        retrain_threshold=graph.chan_retrain_threshold,
+        retrain_ps=graph.chan_retrain_ps,
+        rel_seed=graph.chan_rel_seed,
+    )
+
+
 def build_workload(
     graph: FabricGraph,
     specs: Sequence[RequesterSpec],
@@ -258,6 +285,18 @@ def build_workload(
         fixed_after_ps=jnp.asarray(fixed_after),
         is_payload=jnp.asarray(is_payload), valid=jnp.asarray(valid),
     )
+    # stochastic link reliability: sample the per-hop replay/retraining
+    # tables from the seeded per-channel streams (build time, like issue
+    # jitter, so sweeps can stack the sampled tables and vmap).  The
+    # expected-value mode leaves Hops in the PR-1 layout untouched.
+    rel = _reliability_tables(graph, flit_cfg)
+    if rel is not None:
+        extra_wire, retrain_after = link_layer.sample_hop_tables(
+            channel, nbytes, valid, **rel)
+        hops = hops._replace(
+            extra_wire_bytes=jnp.asarray(extra_wire),
+            retrain_after_ps=jnp.asarray(retrain_after),
+        )
     channels = make_channels(graph, ep.row_hit_extra_ps, ep.row_miss_extra_ps)
     if flit_cfg.active:
         channels = link_layer.apply_flit(

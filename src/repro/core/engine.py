@@ -25,10 +25,12 @@ All times are int64 **picoseconds** and all sizes int64 bytes, so schedules are
 exact and tie-breaking (by flat item index = packet-major order) is
 deterministic and identical to the oracle.
 
-The per-channel carried state (busy-until, last direction, last DRAM row) is
-what lets one mechanism model full-duplex PCIe links, half-duplex buses with
-turnaround, switch ports, and banked DRAM endpoints uniformly — ESF's
-"decoupling design" (§III-A) expressed as data instead of classes.
+The per-channel carried state (busy-until, last direction, last DRAM row,
+and — under stochastic link reliability — retraining down-until) is what
+lets one mechanism model full-duplex PCIe links, half-duplex buses with
+turnaround, switch ports, banked DRAM endpoints, and link-down stalls
+uniformly — ESF's "decoupling design" (§III-A) expressed as data instead of
+classes.
 """
 
 from __future__ import annotations
@@ -51,7 +53,7 @@ def ser_ps(nbytes, bw_MBps):
     return (nbytes * 1_000_000) // bw_MBps
 
 
-def wire_ser_ps(nbytes, ch: "Channels", chan_clipped):
+def wire_ser_ps(nbytes, ch: "Channels", chan_clipped, extra_wire=None):
     """Serialization time of ``nbytes`` logical bytes on their channels,
     honouring the link-layer flit tables (`core.link_layer`):
 
@@ -59,7 +61,11 @@ def wire_ser_ps(nbytes, ch: "Channels", chan_clipped):
         bytes — and stretch by the expected Go-Back-N CRC-replay overhead
         ``(1 + replay_ppm/1e6)``, floored to exact integer picoseconds;
       * byte-exact channels (flit_size 0, or seed-layout Channels with no
-        flit tables at all) keep the seed formula bit-for-bit.
+        flit tables at all) keep the seed formula bit-for-bit;
+      * ``extra_wire`` (stochastic reliability, `Hops.extra_wire_bytes`)
+        adds the build-time-sampled CRC-replay wire bytes of each item —
+        zero off flit channels, and mutually exclusive with a nonzero
+        ``replay_ppm`` on the same channel by the lowering contract.
     """
     bw = ch.bw_MBps[chan_clipped]
     base = ser_ps(nbytes, bw)
@@ -68,6 +74,8 @@ def wire_ser_ps(nbytes, ch: "Channels", chan_clipped):
     fsize = ch.flit_size[chan_clipped]
     fpay = jnp.maximum(ch.flit_payload[chan_clipped], 1)
     wire = ((nbytes + fpay - 1) // fpay) * fsize
+    if extra_wire is not None:
+        wire = wire + extra_wire
     fser = ser_ps(wire, bw)
     if ch.replay_ppm is not None:
         ppm = ch.replay_ppm[chan_clipped]
@@ -104,7 +112,16 @@ class Channels(NamedTuple):
 
 
 class Hops(NamedTuple):
-    """Per-transaction hop table, shape (N, H); padded hops have valid=False."""
+    """Per-transaction hop table, shape (N, H); padded hops have valid=False.
+
+    The two optional tables carry the stochastic link-reliability samples
+    (`core.link_layer.sample_hop_tables`, seeded at build time):
+    ``extra_wire_bytes`` — sampled Go-Back-N replay wire bytes added to the
+    hop's serialization; ``retrain_after_ps`` — link-down interval the hop's
+    channel enters when the hop departs (retraining stall; the channel
+    grants nothing until it ends).  ``None`` — the deterministic
+    expected-value layout — keeps the scan structurally identical to PR 1.
+    """
 
     channel: jnp.ndarray      # (N, H) int32
     nbytes: jnp.ndarray       # (N, H) int64 serialized bytes on this hop
@@ -113,6 +130,8 @@ class Hops(NamedTuple):
     fixed_after_ps: jnp.ndarray  # (N, H) int64 latency after transmission
     is_payload: jnp.ndarray   # (N, H) bool — payload (vs header) bytes
     valid: jnp.ndarray        # (N, H) bool
+    extra_wire_bytes: jnp.ndarray | None = None   # (N, H) int64
+    retrain_after_ps: jnp.ndarray | None = None   # (N, H) int64
 
 
 class Schedule(NamedTuple):
@@ -144,20 +163,42 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
     s_dir = hops.direction.reshape(k)[order]
     s_row = hops.row.reshape(k)[order]
     s_bytes = hops.nbytes.reshape(k)[order]
-    s_ser = wire_ser_ps(s_bytes, ch, jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1))
+    s_extra = (hops.extra_wire_bytes.reshape(k)[order]
+               if hops.extra_wire_bytes is not None else None)
+    s_ser = wire_ser_ps(s_bytes, ch, jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1),
+                        extra_wire=s_extra)
     s_turn = ch.turnaround_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
     s_rowhit = ch.row_hit_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
     s_rowmiss = ch.row_miss_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
+    # stochastic retraining stalls extend the carry with per-channel
+    # down-until state — resolved at trace time so the deterministic layout
+    # compiles to the exact PR-1 scan
+    has_retrain = hops.retrain_after_ps is not None
+    xs = (s_chan, s_valid, s_arrive, s_dir, s_row, s_ser, s_turn, s_rowhit,
+          s_rowmiss, s_bytes)
+    if has_retrain:
+        xs = xs + (hops.retrain_after_ps.reshape(k)[order],)
 
     def scan_fn(carry, x):
-        prev_chan, prev_depart, prev_dir, prev_row = carry
-        chan, valid, arr, drn, row, ser, turn, rhit, rmiss, nbytes = x
+        if has_retrain:
+            prev_chan, prev_depart, prev_dir, prev_row, prev_down = carry
+            chan, valid, arr, drn, row, ser, turn, rhit, rmiss, nbytes, \
+                retrain = x
+        else:
+            prev_chan, prev_depart, prev_dir, prev_row = carry
+            chan, valid, arr, drn, row, ser, turn, rhit, rmiss, nbytes = x
         # zero-byte packets ride a side channel (e.g. DRAM command path):
         # they pass through instantly and do not occupy or turn the bus
         valid = valid & (nbytes > 0)
         same = chan == prev_chan
         gap = jnp.where(same & (drn != prev_dir), turn, 0)
-        start = jnp.where(same, jnp.maximum(arr, prev_depart + gap), arr)
+        floor = prev_depart + gap
+        if has_retrain:
+            # a retraining link grants nothing until down_until passes; the
+            # state is per channel, i.e. per scan segment — reset on entry
+            seg_down = jnp.where(same, prev_down, jnp.int64(0))
+            floor = jnp.maximum(floor, seg_down)
+        start = jnp.where(same, jnp.maximum(arr, floor), arr)
         row_managed = row >= 0
         row_extra = jnp.where(
             row_managed,
@@ -173,14 +214,17 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
             jnp.where(valid, drn, prev_dir),
             jnp.where(valid & (row >= 0), row, prev_row),
         )
+        if has_retrain:
+            new_down = jnp.maximum(
+                seg_down, jnp.where(retrain > 0, depart + retrain,
+                                    jnp.int64(0)))
+            new_carry = new_carry + (jnp.where(valid, new_down, prev_down),)
         return new_carry, (start, depart)
 
     init = (jnp.int32(-1), jnp.int64(0), jnp.int8(-1), jnp.int32(-2))
-    _, (s_start, s_depart) = jax.lax.scan(
-        scan_fn, init,
-        (s_chan, s_valid, s_arrive, s_dir, s_row, s_ser, s_turn, s_rowhit,
-         s_rowmiss, s_bytes),
-    )
+    if has_retrain:
+        init = init + (jnp.int64(0),)
+    _, (s_start, s_depart) = jax.lax.scan(scan_fn, init, xs)
 
     start = jnp.zeros(k, dtype=jnp.int64).at[order].set(s_start).reshape(n, h)
     depart = jnp.zeros(k, dtype=jnp.int64).at[order].set(s_depart).reshape(n, h)
@@ -206,9 +250,12 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
     n, h = hops.channel.shape
     rounds = max_rounds if max_rounds > 0 else 3 * h + 8
 
-    # contention-free lower bound initialization
+    # contention-free lower bound initialization (sampled replay stretch
+    # included: it delays the item even uncontended; retraining stalls only
+    # ever delay *other* items, so they keep this a valid lower bound)
     ser0 = wire_ser_ps(hops.nbytes, channels,
-                       jnp.minimum(hops.channel, channels.bw_MBps.shape[0] - 1))
+                       jnp.minimum(hops.channel, channels.bw_MBps.shape[0] - 1),
+                       extra_wire=hops.extra_wire_bytes)
     step = jnp.where(hops.valid, ser0 + hops.fixed_after_ps, 0)
     arrive0 = issue_ps[:, None] + jnp.concatenate(
         [jnp.zeros((n, 1), jnp.int64), jnp.cumsum(step, axis=1)], axis=1

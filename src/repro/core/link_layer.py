@@ -36,6 +36,22 @@ serialization, plus an effective bandwidth and a fixed per-hop latency add.
 byte-exact schedules bit-for-bit.  Because the tables are plain arrays in
 ``engine.Channels``, whole BER x bandwidth x flit-mode sweeps ``vmap`` in
 one jit (see ``kernels.flit_pack`` for the analytic-efficiency companion).
+
+  * **Stochastic reliability** (``FlitConfig(reliability="stochastic")``) —
+    the expected-value replay model above is exact in the mean but blind to
+    tails: every packet pays the same stretch, so p99 == p50 scaled.  The
+    stochastic mode instead samples, per flit and per channel from a seeded
+    stream at build time (like issue jitter), the actual Go-Back-N failure
+    counts — landing as per-hop ``extra_wire_bytes`` — and **retraining
+    stalls**: a flit failing ``retrain_threshold`` times consecutively drops
+    the link into a microsecond-scale Recovery interval (per-hop
+    ``retrain_after_ps``), during which the channel grants nothing — the
+    per-channel ``down_until`` state the engine carries in its scan (its
+    first stateful extension beyond FCFS).  Both tables ride in ``Hops``,
+    not ``Channels``, so seeded BER sweeps still ``vmap`` (stack the sampled
+    tables); at BER 0 the samples are all zero and the schedule equals the
+    deterministic path exactly, and ``core.ref_des`` mirrors both effects so
+    engine == oracle stays bit-exact for any fixed seed.
 """
 
 from __future__ import annotations
@@ -46,9 +62,11 @@ from dataclasses import dataclass
 import numpy as np
 
 from .calibration import (CRC_REPLAY_RTT_PS, FEC_LATENCY_PS, FLIT68_PAYLOAD_B,
-                          FLIT68_SIZE_B, FLIT256_PAYLOAD_B, FLIT256_SIZE_B)
+                          FLIT68_SIZE_B, FLIT256_PAYLOAD_B, FLIT256_SIZE_B,
+                          LINK_RETRAIN_PS)
 
 PPM = 1_000_000
+RELIABILITY_MODES = ("expected", "stochastic")
 # Ceiling on the expected Go-Back-N replay overhead: 1000x extra
 # transmissions per flit.  The expected-value model diverges as the flit
 # error probability approaches 1, but a real link retrains long before
@@ -85,6 +103,25 @@ class FlitConfig:
     retry_window    Go-Back-N replay window, in flits in flight.
     fec_ps          per-hop FEC decode latency; None = mode default
                     (lightweight FEC exists only in 256 B flit mode).
+    reliability     "expected" — CRC replay folded into serialization as the
+                    deterministic expected-value stretch (``replay_ppm``; the
+                    PR-1 model, exact and monotone, what sweeps want);
+                    "stochastic" — seeded per-flit Bernoulli replay sampled
+                    at build time (`sample_replays`): per-packet replay
+                    *counts* instead of a mean goodput scale, so tail
+                    latency sees bursts, plus retraining stalls below.
+    rel_seed        seed of the stochastic sampling stream.  Each channel
+                    derives an independent substream from (rel_seed, channel
+                    id), so a fixed seed gives one reproducible fault
+                    history for the whole fabric.
+    retrain_threshold  consecutive failed transmissions of one flit that
+                    force link retraining (0 disables).  Only meaningful in
+                    stochastic mode — the expected-value model clamps at
+                    MAX_REPLAY_PPM instead (see its comment).
+    retrain_ps      link-down interval per retraining event; None = the
+                    calibrated microsecond-scale `LINK_RETRAIN_PS`.  While
+                    down, the channel grants nothing (per-channel
+                    ``down_until`` state carried in the engine scan).
     """
 
     mode: str = "none"
@@ -93,6 +130,10 @@ class FlitConfig:
     credit_rtt_ps: int = CRC_REPLAY_RTT_PS
     retry_window: int = 16
     fec_ps: int | None = None
+    reliability: str = "expected"
+    rel_seed: int = 0
+    retrain_threshold: int = 0
+    retrain_ps: int | None = None
 
     def __post_init__(self):
         if self.mode not in FLIT_GEOMETRY:
@@ -102,6 +143,13 @@ class FlitConfig:
             raise ValueError(f"ber {self.ber} out of [0, 1)")
         if self.rx_credits < 1:
             raise ValueError("rx_credits must be >= 1")
+        if self.reliability not in RELIABILITY_MODES:
+            raise ValueError(f"unknown reliability {self.reliability!r}; "
+                             f"expected one of {RELIABILITY_MODES}")
+        if self.retrain_threshold < 0:
+            raise ValueError("retrain_threshold must be >= 0")
+        if self.retrain_ps is not None and self.retrain_ps < 0:
+            raise ValueError("retrain_ps must be >= 0")
 
     @property
     def active(self) -> bool:
@@ -116,6 +164,14 @@ class FlitConfig:
         if self.fec_ps is not None:
             return self.fec_ps
         return FEC_LATENCY_PS if self.mode == "flit256" else 0
+
+    @property
+    def stochastic(self) -> bool:
+        return self.active and self.reliability == "stochastic"
+
+    @property
+    def retrain_down_ps(self) -> int:
+        return LINK_RETRAIN_PS if self.retrain_ps is None else self.retrain_ps
 
 
 def normalize(flit: "FlitConfig | str | None") -> FlitConfig:
@@ -192,6 +248,141 @@ def goodput_efficiency(mode: str, ber: float = 0.0,
 
 
 # ---------------------------------------------------------------------------
+# Stochastic replay + retraining (seeded per-flit sampling, build time)
+# ---------------------------------------------------------------------------
+
+def _clamp_flit_p(p: float, retry_window: int) -> float:
+    """The stochastic twin of the MAX_REPLAY_PPM divergence guard: cap the
+    per-flit failure probability where the expected Go-Back-N extras per
+    flit (W * p / (1 - p)) reach the expected-value model's ceiling — a
+    link that bad retrains rather than replaying forever.  Also keeps the
+    geometric success probability strictly positive once `flit_error_prob`
+    rounds to 1.0."""
+    max_fails = MAX_REPLAY_PPM / PPM / max(retry_window, 1)
+    return min(p, max_fails / (1.0 + max_fails))
+
+
+def retrain_event_prob(ber: float, mode: str, retrain_threshold: int,
+                       retry_window: int = 16) -> float:
+    """Probability one flit fails CRC ``retrain_threshold`` times in a row.
+
+    Transmissions of one flit are independent Bernoulli(p) failures, so a
+    run of R consecutive failures — the condition that drops the link into
+    retraining — has probability p**R per flit, with p clamped exactly as
+    `sample_replays` clamps it so the analytic helper matches the sampler
+    in the high-BER regime.
+    """
+    if retrain_threshold <= 0:
+        return 0.0
+    p = _clamp_flit_p(flit_error_prob(ber, mode), retry_window)
+    return p ** retrain_threshold
+
+
+def sample_replays(n_flits: np.ndarray, p: float, retry_window: int,
+                   retrain_threshold: int,
+                   rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """Sample one channel's per-hop Go-Back-N replay flits + retrain events.
+
+    ``n_flits[i]`` is the flit count of hop ``i`` on this channel, in flat
+    hop order (the deterministic sampling order for a fixed seed).  Per
+    flit, the failed transmissions before CRC success are geometric with
+    failure probability ``p``; each failure replays the ``retry_window``
+    flits in flight behind it, so a hop of ``n`` flits carries
+    ``W * NegBinomial(n, 1 - p)`` extra flit transmissions — whose mean,
+    ``n * W * p / (1 - p)``, is exactly the expected-value model's
+    ``replay_ppm`` stretch.  Retraining events (a flit failing
+    ``retrain_threshold`` times consecutively, probability ``p**R`` per
+    flit) are sampled as an independent ``Binomial(n, p**R)`` draw per hop —
+    independent of the replay total, a documented approximation that keeps
+    sampling O(1) per hop instead of O(flits).
+
+    Returns ``(extra_flits, retrain_events)`` int64 arrays shaped like
+    ``n_flits``.
+    """
+    n_flits = np.asarray(n_flits, dtype=np.int64)
+    extra = np.zeros_like(n_flits)
+    events = np.zeros_like(n_flits)
+    if n_flits.size == 0 or p <= 0.0:
+        return extra, events
+    w = max(retry_window, 1)
+    p = _clamp_flit_p(p, w)
+    pos = n_flits > 0
+    extra[pos] = rng.negative_binomial(n_flits[pos], 1.0 - p) * w
+    if retrain_threshold > 0:
+        q = p ** retrain_threshold
+        if q > 0.0:
+            events[pos] = rng.binomial(n_flits[pos], q)
+    return extra, events
+
+
+def broadcast_reliability_tables(cfg: "FlitConfig", n_channels: int,
+                                 link_mask: np.ndarray) -> dict:
+    """One stochastic config broadcast into per-channel sampling tables.
+
+    The kwargs of `sample_hop_tables` for a fabric whose link channels
+    (``link_mask`` true) all run ``cfg`` — the single definition shared by
+    the workload-level override path (`devices.build_workload(flit=...)`)
+    and any caller resampling tables off an existing hop layout (e.g. the
+    vmapped BER sweeps in ``bench_link_reliability``).
+    """
+    size, payload = cfg.geometry
+    return dict(
+        stochastic=np.asarray(link_mask, bool),
+        err_p=np.full(n_channels, flit_error_prob(cfg.ber, cfg.mode)),
+        flit_size=np.full(n_channels, size, np.int64),
+        flit_payload=np.full(n_channels, payload, np.int64),
+        retry_window=np.full(n_channels, cfg.retry_window, np.int64),
+        retrain_threshold=np.full(n_channels, cfg.retrain_threshold,
+                                  np.int64),
+        retrain_ps=np.full(n_channels, cfg.retrain_down_ps, np.int64),
+        rel_seed=np.full(n_channels, cfg.rel_seed, np.int64),
+    )
+
+
+def channel_rng(rel_seed: int, channel: int) -> np.random.Generator:
+    """The per-channel sampling stream: independent substreams per channel
+    id, reproducible for a fixed ``rel_seed`` regardless of which other
+    channels exist or sample first."""
+    return np.random.default_rng(
+        np.random.SeedSequence(entropy=int(rel_seed),
+                               spawn_key=(int(channel),)))
+
+
+def sample_hop_tables(chan: np.ndarray, nbytes: np.ndarray, valid: np.ndarray,
+                      *, stochastic: np.ndarray, err_p: np.ndarray,
+                      flit_size: np.ndarray, flit_payload: np.ndarray,
+                      retry_window: np.ndarray, retrain_threshold: np.ndarray,
+                      retrain_ps: np.ndarray,
+                      rel_seed: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Sample the per-hop stochastic tables for a whole hop matrix.
+
+    All per-channel arrays come from the `FabricGraph` lowering (or a
+    broadcast workload-level override).  Returns ``(extra_wire_bytes,
+    retrain_after_ps)`` int64 arrays of ``chan``'s shape: sampled replay
+    wire bytes added to the hop's serialization, and the sampled link-down
+    interval the channel enters when the hop departs (events x per-event
+    retraining stall).
+    """
+    chan = np.asarray(chan)
+    nbytes = np.asarray(nbytes, dtype=np.int64)
+    valid = np.asarray(valid, dtype=bool)
+    extra_wire = np.zeros(chan.shape, dtype=np.int64)
+    retrain_after = np.zeros(chan.shape, dtype=np.int64)
+    for c in np.where(np.asarray(stochastic, bool))[0]:
+        payload = max(int(flit_payload[c]), 1)
+        mask = (chan == c) & valid & (nbytes > 0)
+        if not mask.any():
+            continue
+        n_flits = -(-nbytes[mask] // payload)
+        extra, events = sample_replays(
+            n_flits, float(err_p[c]), int(retry_window[c]),
+            int(retrain_threshold[c]), channel_rng(int(rel_seed[c]), int(c)))
+        extra_wire[mask] = extra * int(flit_size[c])
+        retrain_after[mask] = events * int(retrain_ps[c])
+    return extra_wire, retrain_after
+
+
+# ---------------------------------------------------------------------------
 # Credit-based flow control
 # ---------------------------------------------------------------------------
 
@@ -216,13 +407,28 @@ def credit_limited_MBps(bw_MBps: int, cfg: FlitConfig) -> int:
 
 @dataclass(frozen=True)
 class LoweredLink:
-    """Per-direction channel entries a flit link contributes to the graph."""
+    """Per-direction channel entries a flit link contributes to the graph.
+
+    The first five fields are the deterministic engine tables (PR-1
+    contract).  The reliability block parameterizes build-time stochastic
+    sampling (`sample_hop_tables`); it never enters the engine's channel
+    arrays — sampled outcomes land in per-hop ``Hops`` tables instead, which
+    is what keeps BER sweeps vmappable.  In stochastic mode ``replay_ppm``
+    is 0: the sampled per-flit replays replace the expected-value stretch
+    (double counting would bias goodput low).
+    """
 
     eff_bw_MBps: int      # credit-capped serialization bandwidth
     extra_fixed_ps: int   # FEC decode latency added to per-hop fixed latency
     flit_size: int        # 0 = byte-exact channel
     flit_payload: int
     replay_ppm: int       # expected CRC-replay overhead (Go-Back-N)
+    stochastic: bool = False   # sample per-flit replays at build time
+    flit_err_p: float = 0.0    # per-flit CRC failure probability
+    retry_window: int = 0      # Go-Back-N window (flits replayed per failure)
+    retrain_threshold: int = 0  # consecutive failures forcing retraining
+    retrain_ps: int = 0        # link-down interval per retraining event
+    rel_seed: int = 0          # sampling stream seed
 
 
 def lower_link(bw_MBps: int, flit: "FlitConfig | str | None") -> LoweredLink:
@@ -236,7 +442,15 @@ def lower_link(bw_MBps: int, flit: "FlitConfig | str | None") -> LoweredLink:
         extra_fixed_ps=cfg.fec_latency_ps,
         flit_size=size,
         flit_payload=payload,
-        replay_ppm=replay_overhead_ppm(cfg.ber, cfg.mode, cfg.retry_window),
+        replay_ppm=0 if cfg.stochastic
+        else replay_overhead_ppm(cfg.ber, cfg.mode, cfg.retry_window),
+        stochastic=cfg.stochastic,
+        flit_err_p=flit_error_prob(cfg.ber, cfg.mode) if cfg.stochastic
+        else 0.0,
+        retry_window=cfg.retry_window,
+        retrain_threshold=cfg.retrain_threshold if cfg.stochastic else 0,
+        retrain_ps=cfg.retrain_down_ps if cfg.stochastic else 0,
+        rel_seed=cfg.rel_seed,
     )
 
 
@@ -257,7 +471,10 @@ def apply_flit(channels, link_mask: np.ndarray, flit: "FlitConfig | str | None")
     if not cfg.active:
         return channels
     size, payload = cfg.geometry
-    ppm = replay_overhead_ppm(cfg.ber, cfg.mode, cfg.retry_window)
+    # stochastic reliability replaces the expected stretch with sampled
+    # per-hop tables (devices.build_workload), so the channel ppm stays 0
+    ppm = 0 if cfg.stochastic \
+        else replay_overhead_ppm(cfg.ber, cfg.mode, cfg.retry_window)
     mask = jnp.asarray(link_mask, bool)
     bw = jnp.where(
         mask,

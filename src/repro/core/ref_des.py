@@ -15,6 +15,12 @@ Semantics (must match `core.engine.simulate` bit-for-bit):
   * flit-mode channels (`core.link_layer`) serialize whole flits —
     ``ceil(bytes / flit_payload) * flit_size`` wire bytes — stretched by the
     expected Go-Back-N CRC-replay factor ``(1 + replay_ppm/1e6)``, floored;
+  * stochastic reliability (per-hop sampled tables in `Hops`): the hop's
+    sampled replay wire bytes add to its flit-quantized wire bytes, and a
+    hop with ``retrain_after_ps > 0`` puts its channel into a link-down
+    interval at departure — subsequent grants on that channel start no
+    earlier than ``down_until`` (the engine's scan-carry state, mirrored
+    here as per-channel state so equality stays bit-exact per seed);
   * arrival at hop h+1 = departure at hop h + fixed_after[h].
 """
 
@@ -45,11 +51,18 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
             if channels.flit_payload is not None else None)
     rppm = (np.asarray(channels.replay_ppm)
             if channels.replay_ppm is not None else None)
+    extra_wire = (np.asarray(hops.extra_wire_bytes)
+                  if hops.extra_wire_bytes is not None else None)
+    retrain = (np.asarray(hops.retrain_after_ps)
+               if hops.retrain_after_ps is not None else None)
 
-    def ser_time(nb: int, c: int) -> int:
+    def ser_time(p: int, hop: int, c: int) -> int:
+        nb = int(nbytes[p, hop])
         if fsize is None or fsize[c] == 0:
             return (nb * 1_000_000) // int(bw[c])
         wire = -(-nb // max(int(fpay[c]), 1)) * int(fsize[c])
+        if extra_wire is not None:
+            wire += int(extra_wire[p, hop])
         fser = (wire * 1_000_000) // int(bw[c])
         if rppm is not None:
             fser = (fser * (1_000_000 + int(rppm[c]))) // 1_000_000
@@ -61,7 +74,7 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
     depart = np.zeros((n, h), dtype=np.int64)
 
     # channel state
-    free_at = {}      # channel -> (time, last_dir, last_row)
+    free_at = {}      # channel -> (time, last_dir, last_row, down_until)
     queues = {}       # channel -> heap of (arrival, flat_idx, pkt, hop)
 
     # event heap: (time, seq, kind, payload)  kind 0=arrival at hop, 1=channel free
@@ -77,7 +90,7 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
         q = queues.get(c)
         if not q:
             return
-        t_free, last_dir, last_row = free_at.get(c, (0, -1, -2))
+        t_free, last_dir, last_row, down_until = free_at.get(c, (0, -1, -2, 0))
         if t_free > now:
             return
         # FCFS by (arrival, flat index); only items that have arrived
@@ -87,8 +100,10 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
             return
         heapq.heappop(q)
         gap = int(turn[c]) if (last_dir != -1 and direction[p, hop] != last_dir) else 0
-        st = max(arr, t_free + gap)
-        ser = ser_time(int(nbytes[p, hop]), c)
+        # a retraining channel grants nothing before down_until (the gap is
+        # NOT re-paid on top of it: mirror of the engine's max(floor, down))
+        st = max(arr, t_free + gap, down_until)
+        ser = ser_time(p, hop, c)
         extra = 0
         r = int(row[p, hop])
         if r >= 0:
@@ -96,7 +111,10 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
         dp = st + ser + extra
         start[p, hop] = st
         depart[p, hop] = dp
-        free_at[c] = (dp, int(direction[p, hop]), r if r >= 0 else last_row)
+        if retrain is not None and retrain[p, hop] > 0:
+            down_until = max(down_until, dp + int(retrain[p, hop]))
+        free_at[c] = (dp, int(direction[p, hop]),
+                      r if r >= 0 else last_row, down_until)
         arrive[p, hop + 1] = dp + int(fixed[p, hop])
         heapq.heappush(ev, (int(arrive[p, hop + 1]), seq, 0, (p, hop + 1))); seq += 1
         heapq.heappush(ev, (dp, seq, 1, c)); seq += 1

@@ -136,6 +136,10 @@ class FabricGraph:
         # channel arrays: bw, fixed, turnaround, is_service + flit tables
         bw, fixed, turn, is_service = [], [], [], []
         f_size, f_pay, f_ppm = [], [], []
+        # stochastic-reliability sampling parameters (consumed at build time
+        # by devices.build_workload via link_layer.sample_hop_tables; they
+        # never enter the engine's channel arrays)
+        r_sto, r_p, r_win, r_thr, r_down, r_seed = [], [], [], [], [], []
         # directed edge lookup: (u, v) -> (channel, direction flag)
         self._edge: dict[tuple[int, int], tuple[int, int]] = {}
         self._adj: list[list[int]] = [[] for _ in range(n)]
@@ -163,6 +167,12 @@ class FabricGraph:
             f_size += [low.flit_size] * n_dirs
             f_pay += [low.flit_payload] * n_dirs
             f_ppm += [low.replay_ppm] * n_dirs
+            r_sto += [low.stochastic] * n_dirs
+            r_p += [low.flit_err_p] * n_dirs
+            r_win += [low.retry_window] * n_dirs
+            r_thr += [low.retrain_threshold] * n_dirs
+            r_down += [low.retrain_ps] * n_dirs
+            r_seed += [low.rel_seed] * n_dirs
             self._adj[a].append(b)
             self._adj[b].append(a)
             cost = np.int64(ls.fixed_ps) + (1 << 20)  # hop-count dominant, latency tiebreak
@@ -182,6 +192,12 @@ class FabricGraph:
                 f_size.append(0)
                 f_pay.append(0)
                 f_ppm.append(0)
+                r_sto.append(False)
+                r_p.append(0.0)
+                r_win.append(0)
+                r_thr.append(0)
+                r_down.append(0)
+                r_seed.append(0)
 
         self.chan_bw_MBps = np.asarray(bw, dtype=np.int64)
         self.chan_fixed_ps = np.asarray(fixed, dtype=np.int64)
@@ -190,6 +206,12 @@ class FabricGraph:
         self.chan_flit_size = np.asarray(f_size, dtype=np.int64)
         self.chan_flit_payload = np.asarray(f_pay, dtype=np.int64)
         self.chan_replay_ppm = np.asarray(f_ppm, dtype=np.int64)
+        self.chan_rel_stochastic = np.asarray(r_sto, dtype=bool)
+        self.chan_flit_err_p = np.asarray(r_p, dtype=np.float64)
+        self.chan_retry_window = np.asarray(r_win, dtype=np.int64)
+        self.chan_retrain_threshold = np.asarray(r_thr, dtype=np.int64)
+        self.chan_retrain_ps = np.asarray(r_down, dtype=np.int64)
+        self.chan_rel_seed = np.asarray(r_seed, dtype=np.int64)
         self.n_channels = len(bw)
 
         # ---- all-pairs shortest paths (Floyd–Warshall w/ next-hop) ---------

@@ -57,7 +57,10 @@ class MultiVCS:
     pool: list[LogicalDevice] = field(default_factory=list)
     # link layer of every vPPB link (host<->USP and DSP<->device): a
     # FlitConfig / mode string moves the whole VCS between CXL 2.0 (68 B
-    # flits) and CXL 3.x (256 B flits); None keeps byte-exact seed semantics
+    # flits) and CXL 3.x (256 B flits); None keeps byte-exact seed semantics.
+    # Reliability rides along: a FlitConfig(reliability="stochastic") makes
+    # every vPPB link sample seeded per-flit replays + retraining stalls
+    # (each channel gets its own substream, so one seed covers the fabric)
     flit: FlitConfig | str | None = None
 
     def __post_init__(self):

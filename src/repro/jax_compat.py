@@ -1,0 +1,119 @@
+"""JAX API compatibility shims (installed floor: jax 0.4.37).
+
+The model/runtime stack was written against the post-0.6 sharding surface
+(``jax.sharding.get_abstract_mesh``, ``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.shard_map``, ``jax.lax.pcast``, PartitionSpec-typed
+``jit`` shardings).  None of those exist in the 0.4.x series this environment
+pins, so every use site goes through this module instead: each shim probes
+for the new symbol and falls back to the 0.4.x equivalent —
+
+  =====================  =====================================================
+  new API                0.4.x fallback
+  =====================  =====================================================
+  get_abstract_mesh()    thread-local physical mesh (``with Mesh(...):``)
+  AxisType               inert enum stand-in (axis typing didn't exist yet)
+  make_mesh(axis_types=) kwarg dropped (meshes were untyped)
+  set_mesh(mesh)         the mesh itself — ``Mesh`` is a context manager
+  shard_map(...)         jax.experimental.shard_map (check_rep off: the vma
+                         varying-type system the new API checks didn't exist)
+  pcast(x, ..)           identity (vma typing again)
+  tree_as_shardings      PartitionSpec leaves wrapped into NamedSharding —
+                         0.4.x ``jit`` only accepts Sharding instances
+  =====================  =====================================================
+
+Every shim resolves the new path when it exists, so this module is a no-op
+pass-through on current JAX; ``tests/test_jax_compat.py`` asserts the whole
+table resolves on whatever is installed.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6: explicit/auto/manual axis typing
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # 0.4.x: meshes are untyped; accept and ignore
+    HAS_AXIS_TYPE = False
+
+    class AxisType:  # type: ignore[no-redef]
+        """Inert stand-in so call sites can always name an axis type."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every version."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and HAS_AXIS_TYPE:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for sharding resolution.
+
+    New JAX: ``jax.set_mesh``.  0.4.x: a concrete ``Mesh`` is itself a
+    context manager that installs the thread-local physical mesh, which is
+    exactly what `get_abstract_mesh` below (and PartitionSpec resolution
+    inside `shard`) reads back.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The mesh currently in scope, or None outside any mesh context."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        m = fn()
+        if m is not None and m.axis_names:
+            return m
+        return None
+    from jax._src import mesh as mesh_lib  # 0.4.x thread-local mesh state
+
+    env = getattr(mesh_lib.thread_resources, "env", None)
+    m = getattr(env, "physical_mesh", None)
+    if m is not None and not m.empty:
+        return m
+    return None
+
+
+def pcast(x, axes, *, to="varying"):
+    """``jax.lax.pcast`` or identity: pre-vma shard_map has no varying types."""
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is None:
+        return x
+    return fn(x, axes, to=to)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with the experimental 0.4.x module as fallback."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def tree_as_shardings(mesh, tree):
+    """Wrap PartitionSpec leaves into NamedSharding (None leaves pass through).
+
+    0.4.x ``jit`` rejects raw PartitionSpecs in in_/out_shardings; wrapping is
+    version-independent, so call sites use this unconditionally.
+    """
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )

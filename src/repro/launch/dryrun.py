@@ -35,6 +35,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import (ARCH_IDS, SHAPES, get_config,  # noqa: E402
                            shape_applicable)
+from repro.jax_compat import set_mesh, tree_as_shardings  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import model_zoo as zoo  # noqa: E402
 from repro.models import transformer as TF  # noqa: E402
@@ -100,7 +101,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     kind = shape.kind
 
     t0 = time.time()
-    with jax.set_mesh(mesh), use_rules(rules):
+    with set_mesh(mesh), use_rules(rules):
         aparams = zoo.abstract_params(cfg)
         pspecs = prune_tree_specs(param_specs(TF.param_axes(cfg)), aparams,
                                   mesh)
@@ -131,10 +132,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                                                 lr=jnp.float32(1e-4))
                 return new_p, new_s, loss
 
-            jitted = jax.jit(step,
-                             in_shardings=(pspecs, ospecs, bspecs["batch"]),
-                             out_shardings=(pspecs, ospecs, None),
-                             donate_argnums=(0, 1))
+            jitted = jax.jit(
+                step,
+                in_shardings=tree_as_shardings(
+                    mesh, (pspecs, ospecs, bspecs["batch"])),
+                out_shardings=tree_as_shardings(mesh, (pspecs, ospecs, None)),
+                donate_argnums=(0, 1))
             args = (aparams, aopt, inputs["batch"])
         elif kind == "prefill":
             acache = zoo.abstract_cache(cfg, shape.global_batch,
@@ -151,8 +154,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             if "frontend_embeds" in inputs:
                 in_sh.append(bspecs["frontend_embeds"])
                 args.append(inputs["frontend_embeds"])
-            jitted = jax.jit(step, in_shardings=tuple(in_sh),
-                             out_shardings=(None, cspecs))
+            jitted = jax.jit(
+                step, in_shardings=tree_as_shardings(mesh, tuple(in_sh)),
+                out_shardings=tree_as_shardings(mesh, (None, cspecs)))
             args = tuple(args)
         else:  # decode / long_decode
             acache = inputs["cache"]
@@ -162,11 +166,13 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             def step(params, cache, tokens, positions):
                 return TF.decode_step(params, cfg, cache, tokens, positions)
 
-            jitted = jax.jit(step,
-                             in_shardings=(pspecs, cspecs, bspecs["tokens"],
-                                           bspecs["positions"]),
-                             out_shardings=(None, cspecs),
-                             donate_argnums=(1,))
+            jitted = jax.jit(
+                step,
+                in_shardings=tree_as_shardings(
+                    mesh, (pspecs, cspecs, bspecs["tokens"],
+                           bspecs["positions"])),
+                out_shardings=tree_as_shardings(mesh, (None, cspecs)),
+                donate_argnums=(1,))
             args = (aparams, acache, inputs["tokens"], inputs["positions"])
 
         lowered = jitted.lower(*args)
@@ -249,7 +255,8 @@ def _lower_period(cfg, shape, mesh, rules, pspecs, aparams, kind) -> dict:
                 logical("batch", None, "kv_heads", None), a.shape, mesh),
             enc_kv_spec))
         args.append(enc_kv_spec)
-    jitted = jax.jit(period, in_shardings=tuple(in_sh))
+    jitted = jax.jit(period,
+                     in_shardings=tree_as_shardings(mesh, tuple(in_sh)))
     lowered = jitted.lower(*args)
     compiled = lowered.compile()
     ca = compiled.cost_analysis()

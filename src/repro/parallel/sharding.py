@@ -17,6 +17,8 @@ from dataclasses import dataclass, field, replace
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import get_abstract_mesh
+
 MESH_AXES = ("pod", "data", "model")
 
 # logical axis -> mesh axis (or tuple, or None)
@@ -92,10 +94,9 @@ def logical(*axes: str | None) -> P:
 
 
 def _current_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is not None and m.axis_names:
-        return m
-    return None
+    # version-guarded: jax.sharding.get_abstract_mesh on new JAX, the
+    # thread-local physical mesh (``with Mesh(...):``) on 0.4.x
+    return get_abstract_mesh()
 
 
 def shard(x, *axes: str | None):

@@ -14,9 +14,9 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.jax_compat import set_mesh, tree_as_shardings
 from repro.models import transformer as TF
 from repro.models import model_zoo as zoo
 from repro.optim import adamw, schedules
@@ -81,31 +81,37 @@ class Trainer:
                 "loss": jnp.mean(losses), "xent": jnp.mean(xents),
                 "lr": lr, **om}
 
-        with jax.set_mesh(self.mesh), use_rules(self.rules):
+        with set_mesh(self.mesh), use_rules(self.rules):
             axes = TF.param_axes(cfg)
             pspecs = param_specs(axes)
             ospecs = adamw.state_axes(pspecs)
             bspec = logical("batch", None)
-            self.param_shardings = jax.tree.map(
-                lambda s: NamedSharding(self.mesh, s), pspecs)
+            # PartitionSpecs wrapped into NamedShardings: 0.4.x jit accepts
+            # only Sharding instances (jax_compat), and it is a no-op upgrade
+            # on new JAX
+            self.param_shardings = psh = tree_as_shardings(self.mesh, pspecs)
+            osh = tree_as_shardings(self.mesh, ospecs)
+            bsh = tree_as_shardings(
+                self.mesh, jax.tree.map(lambda _: bspec,
+                                        {"tokens": 0, "labels": 0}))
             self.step_fn = jax.jit(
                 train_step,
-                in_shardings=(pspecs, ospecs,
-                              jax.tree.map(lambda _: bspec, {"tokens": 0, "labels": 0})),
-                out_shardings=(pspecs, ospecs, None),
+                in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh, None),
                 donate_argnums=(0, 1),
             )
 
     # ------------------------------------------------------------------
     def init_state(self, seed: int = 0):
         cfg = self.cfg
-        with jax.set_mesh(self.mesh), use_rules(self.rules):
+        with set_mesh(self.mesh), use_rules(self.rules):
             pspecs = param_specs(TF.param_axes(cfg))
             init = jax.jit(lambda k: TF.init_params(cfg, k),
-                           out_shardings=pspecs)
+                           out_shardings=tree_as_shardings(self.mesh, pspecs))
             params = init(jax.random.key(seed))
             opt = jax.jit(adamw.init,
-                          out_shardings=adamw.state_axes(pspecs))(params)
+                          out_shardings=tree_as_shardings(
+                              self.mesh, adamw.state_axes(pspecs)))(params)
         return params, opt
 
     def maybe_resume(self, params, opt_state):
@@ -124,7 +130,7 @@ class Trainer:
             params, opt_state = self.init_state()
             params, opt_state, start_step = self.maybe_resume(params, opt_state)
         tc = self.tc
-        with jax.set_mesh(self.mesh), use_rules(self.rules):
+        with set_mesh(self.mesh), use_rules(self.rules):
             for step in range(start_step, tc.steps):
                 batch = source.batch(step)
                 t0 = time.perf_counter()

@@ -1,0 +1,340 @@
+"""Stochastic link reliability: seeded replay sampling + retraining stalls.
+
+Covers the reliability extension of the flit link layer end to end: config
+validation, bit-exactness of the default expected-value path, BER-0
+stochastic == deterministic, engine-vs-oracle exactness with sampled
+replay/retraining tables (both built and randomized), sampling determinism
+and seed decorrelation, the sampled mean tying back to the expected-value
+``replay_ppm`` model, and the bench acceptance gates.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  (x64)
+from repro.core import topology as T
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import Channels, Hops, simulate
+from repro.core.link_layer import (FlitConfig, channel_rng, flit_error_prob,
+                                   replay_overhead_ppm, retrain_event_prob,
+                                   sample_replays)
+from repro.core.ref_des import simulate_ref
+
+BUS_BW = 128_000
+
+
+def _bus_spec(n=150):
+    return RequesterSpec(node=0, n_requests=n, targets=[2, 3, 4, 5],
+                         read_ratio=0.5, issue_interval_ps=300,
+                         payload_bytes=944, seed=3)
+
+
+def _wl(flit, n=150, **kw):
+    topo = T.with_flit(T.single_bus(n_mems=4, bw_MBps=BUS_BW), flit)
+    return build_workload(topo.build(), [_bus_spec(n)], warmup_frac=0.0, **kw)
+
+
+def _stochastic(ber, *, rel_seed=7, retrain_threshold=2,
+                retrain_ps=1_000_000, **kw):
+    return FlitConfig("flit256", ber=ber, reliability="stochastic",
+                      rel_seed=rel_seed, retrain_threshold=retrain_threshold,
+                      retrain_ps=retrain_ps, **kw)
+
+
+# ---------------------------------------------------------------------------
+# config + analytic math
+# ---------------------------------------------------------------------------
+
+def test_reliability_config_validation():
+    with pytest.raises(ValueError, match="reliability"):
+        FlitConfig("flit256", reliability="montecarlo")
+    with pytest.raises(ValueError, match="retrain_threshold"):
+        FlitConfig("flit256", reliability="stochastic", retrain_threshold=-1)
+    with pytest.raises(ValueError, match="retrain_ps"):
+        FlitConfig("flit256", reliability="stochastic", retrain_ps=-1)
+    cfg = _stochastic(1e-6)
+    assert cfg.stochastic
+    assert cfg.retrain_down_ps == 1_000_000
+    assert not FlitConfig("flit256").stochastic        # default: expected
+    assert not FlitConfig("none", reliability="stochastic").stochastic
+    # default retrain interval comes from calibration
+    from repro.core.calibration import LINK_RETRAIN_PS
+    assert FlitConfig("flit256", reliability="stochastic").retrain_down_ps \
+        == LINK_RETRAIN_PS
+
+
+def test_retrain_event_prob():
+    p = flit_error_prob(1e-5, "flit256")
+    assert retrain_event_prob(1e-5, "flit256", 2) == pytest.approx(p ** 2)
+    assert retrain_event_prob(1e-5, "flit256", 0) == 0.0
+    assert retrain_event_prob(0.0, "flit256", 3) == 0.0
+    # high-BER regime: the analytic helper clamps p exactly as the sampler
+    # does, so it stays strictly below 1 even when flit_error_prob hits 1.0
+    assert retrain_event_prob(0.05, "flit256", 2) < 1.0
+
+
+def test_sample_replays_mean_matches_expected_model():
+    """The sampled Go-Back-N extras average to the expected-value stretch:
+    E[extra per flit] = W * p / (1 - p) = replay_ppm / 1e6."""
+    ber, W = 3e-5, 16
+    p = flit_error_prob(ber, "flit256")
+    n_flits = np.full(20_000, 4, np.int64)
+    extra, events = sample_replays(n_flits, p, W, 2, channel_rng(0, 0))
+    mean_per_flit = extra.sum() / n_flits.sum()
+    want = replay_overhead_ppm(ber, "flit256", W) / 1e6
+    assert mean_per_flit == pytest.approx(want, rel=0.15)
+    # retrain events follow the p**R per-flit probability
+    assert events.sum() == pytest.approx(n_flits.sum() * p ** 2, rel=0.5)
+
+
+def test_extreme_ber_clamped_not_crashing():
+    """High-but-accepted BER must sample finite bursts, mirroring the
+    expected model's MAX_REPLAY_PPM divergence guard: flit_error_prob
+    rounds to exactly 1.0 here, which previously crashed negative_binomial
+    with a zero success probability."""
+    from repro.core.link_layer import MAX_REPLAY_PPM, PPM
+
+    assert flit_error_prob(0.05, "flit256") == 1.0
+    n_flits = np.full(500, 4, np.int64)
+    extra, events = sample_replays(n_flits, 1.0, 16, 2, channel_rng(0, 0))
+    assert (extra >= 0).all() and (events >= 0).all()
+    # per-flit extras stay near the clamp ceiling, never diverge
+    assert extra.sum() / n_flits.sum() <= 2 * MAX_REPLAY_PPM / PPM
+    # and the whole build + engine==oracle path holds at that BER
+    wl = _wl(_stochastic(0.05), n=20)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=160)
+    ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+
+
+def test_bench_direct_sampling_matches_build_path():
+    """run_tail_sweep samples tables off the shared hop layout instead of
+    rebuilding per BER; the streams must equal a real per-BER build."""
+    from repro.core.link_layer import (broadcast_reliability_tables,
+                                       sample_hop_tables)
+
+    cfg = _stochastic(3e-4)
+    wl = _wl(FlitConfig("flit256"))
+    wl_built = _wl(cfg)
+    extra, retrain = sample_hop_tables(
+        np.asarray(wl.hops.channel), np.asarray(wl.hops.nbytes),
+        np.asarray(wl.hops.valid),
+        **broadcast_reliability_tables(
+            cfg, int(wl.channels.bw_MBps.shape[0]),
+            np.asarray(wl.channels.flit_size) > 0))
+    assert np.array_equal(extra, np.asarray(wl_built.hops.extra_wire_bytes))
+    assert np.array_equal(retrain,
+                          np.asarray(wl_built.hops.retrain_after_ps))
+
+
+def test_sample_replays_zero_cases():
+    extra, events = sample_replays(np.asarray([4, 0, 7]), 0.0, 16, 2,
+                                   channel_rng(0, 0))
+    assert not extra.any() and not events.any()
+    # zero-flit hops never sample even at huge p
+    extra, _ = sample_replays(np.asarray([0, 0]), 0.5, 16, 2,
+                              channel_rng(0, 0))
+    assert not extra.any()
+
+
+# ---------------------------------------------------------------------------
+# expected mode stays bit-exact; BER 0 stochastic == deterministic
+# ---------------------------------------------------------------------------
+
+def test_expected_mode_ignores_reliability_knobs_bitexact():
+    """reliability="expected" with retrain knobs set is the PR-1 model."""
+    wl0 = _wl(FlitConfig("flit256", ber=1e-6))
+    wl1 = _wl(FlitConfig("flit256", ber=1e-6, reliability="expected",
+                         rel_seed=99, retrain_threshold=4))
+    assert wl1.hops.extra_wire_bytes is None
+    assert wl1.hops.retrain_after_ps is None
+    s0 = simulate(wl0.hops, wl0.channels, wl0.issue_ps, max_rounds=120)
+    s1 = simulate(wl1.hops, wl1.channels, wl1.issue_ps, max_rounds=120)
+    assert np.array_equal(np.asarray(s0.complete), np.asarray(s1.complete))
+    assert np.array_equal(np.asarray(s0.start), np.asarray(s1.start))
+
+
+def test_zero_ber_stochastic_matches_deterministic_exactly():
+    wl_e = _wl(FlitConfig("flit256"))
+    wl_s = _wl(_stochastic(0.0))
+    # sampled tables exist but are all zero
+    assert wl_s.hops.extra_wire_bytes is not None
+    assert not np.asarray(wl_s.hops.extra_wire_bytes).any()
+    assert not np.asarray(wl_s.hops.retrain_after_ps).any()
+    s_e = simulate(wl_e.hops, wl_e.channels, wl_e.issue_ps, max_rounds=120)
+    s_s = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps, max_rounds=120)
+    assert np.array_equal(np.asarray(s_e.complete), np.asarray(s_s.complete))
+    assert np.array_equal(np.asarray(s_e.start), np.asarray(s_s.start))
+
+
+def test_stochastic_lowering_zeroes_replay_ppm():
+    g = T.with_flit(T.single_bus(n_mems=2, bw_MBps=BUS_BW),
+                    _stochastic(1e-5)).build()
+    link = ~np.asarray(g.chan_is_service)
+    assert not np.asarray(g.chan_replay_ppm).any()       # sampled instead
+    assert np.asarray(g.chan_rel_stochastic)[link].all()
+    assert not np.asarray(g.chan_rel_stochastic)[~link].any()
+    assert np.allclose(np.asarray(g.chan_flit_err_p)[link],
+                       flit_error_prob(1e-5, "flit256"))
+    assert (np.asarray(g.chan_retrain_ps)[link] == 1_000_000).all()
+
+
+# ---------------------------------------------------------------------------
+# engine == oracle exactness (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+def test_stochastic_engine_matches_oracle_exactly():
+    wl = _wl(_stochastic(3e-4), n=200)
+    assert np.asarray(wl.hops.extra_wire_bytes).any()    # bursts sampled
+    assert np.asarray(wl.hops.retrain_after_ps).any()    # stalls sampled
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=160)
+    ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    assert np.array_equal(np.asarray(sched.start), ref["start"])
+    assert np.array_equal(np.asarray(sched.depart), ref["depart"])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+def test_random_retrain_tables_engine_matches_oracle(seed):
+    """Randomized per-hop replay/retraining tables over a mix of byte-exact
+    and flit channels — the oracle must agree exactly, including link-down
+    intervals on half-duplex and row-managed channels."""
+    rng = np.random.default_rng(seed)
+    n, h, c = int(rng.integers(3, 24)), int(rng.integers(1, 6)), \
+        int(rng.integers(2, 6))
+    bw = rng.integers(10, 100, c).astype(np.int64) * 1000
+    turn = np.where(rng.random(c) < .5,
+                    rng.integers(100, 5000, c), 0).astype(np.int64)
+    fsize = rng.choice([0, 68, 256], c).astype(np.int64)
+    fpay = np.where(fsize == 68, 64,
+                    np.where(fsize == 256, 236, 0)).astype(np.int64)
+    ch = Channels(jnp.asarray(bw), jnp.asarray(turn),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  flit_size=jnp.asarray(fsize),
+                  flit_payload=jnp.asarray(fpay),
+                  replay_ppm=jnp.asarray(np.zeros(c, np.int64)))
+    chan = rng.integers(0, c, (n, h)).astype(np.int32)
+    nbytes = rng.integers(0, 1200, (n, h)).astype(np.int64)
+    valid = rng.random((n, h)) < .85
+    extra = np.where(rng.random((n, h)) < .3,
+                     rng.integers(0, 8, (n, h)) * 256, 0).astype(np.int64)
+    retrain = np.where(rng.random((n, h)) < .2,
+                       rng.integers(1, 4, (n, h)) * 100_000, 0).astype(np.int64)
+    hops = Hops(jnp.asarray(chan), jnp.asarray(nbytes),
+                jnp.asarray(rng.integers(0, 2, (n, h)).astype(np.int8)),
+                jnp.asarray(np.full((n, h), -1, np.int32)),
+                jnp.asarray(rng.integers(0, 2000, (n, h)).astype(np.int64)),
+                jnp.asarray(valid), jnp.asarray(valid),
+                extra_wire_bytes=jnp.asarray(extra),
+                retrain_after_ps=jnp.asarray(retrain))
+    issue = np.sort(rng.integers(0, 5000, n)).astype(np.int64)
+    sched = simulate(hops, ch, jnp.asarray(issue), max_rounds=160)
+    ref = simulate_ref(hops, ch, issue)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    assert np.array_equal(np.asarray(sched.depart)[valid],
+                          ref["depart"][valid])
+
+
+# ---------------------------------------------------------------------------
+# sampling determinism, decorrelation, config threading
+# ---------------------------------------------------------------------------
+
+def test_sampling_deterministic_per_seed_and_decorrelated_across_seeds():
+    a = np.asarray(_wl(_stochastic(3e-4)).hops.extra_wire_bytes)
+    b = np.asarray(_wl(_stochastic(3e-4)).hops.extra_wire_bytes)
+    assert np.array_equal(a, b)                     # rebuild reproduces
+    c = np.asarray(_wl(_stochastic(3e-4, rel_seed=8)).hops.extra_wire_bytes)
+    assert not np.array_equal(a, c)                 # new seed, new history
+    # per-channel substreams: the two bus directions sample independently
+    ch = np.asarray(_wl(_stochastic(3e-4)).hops.channel)
+    up = a[(ch == 0) & (a > 0)]
+    assert up.size > 0
+
+
+def test_workload_override_path_matches_graph_path():
+    """build_workload(flit=cfg) samples identically to LinkSpec.flit —
+    same channel ids, same per-channel streams, same schedule."""
+    cfg = _stochastic(3e-4)
+    wl_g = _wl(cfg)
+    topo = T.single_bus(n_mems=4, bw_MBps=BUS_BW)
+    wl_o = build_workload(topo.build(), [_bus_spec(150)], warmup_frac=0.0,
+                          flit=cfg)
+    assert np.array_equal(np.asarray(wl_g.hops.extra_wire_bytes),
+                          np.asarray(wl_o.hops.extra_wire_bytes))
+    assert np.array_equal(np.asarray(wl_g.hops.retrain_after_ps),
+                          np.asarray(wl_o.hops.retrain_after_ps))
+    sg = simulate(wl_g.hops, wl_g.channels, wl_g.issue_ps, max_rounds=160)
+    so = simulate(wl_o.hops, wl_o.channels, wl_o.issue_ps, max_rounds=160)
+    assert np.array_equal(np.asarray(sg.complete), np.asarray(so.complete))
+
+
+def test_multivcs_threads_stochastic_reliability():
+    from repro.core.vcs import MultiVCS
+
+    v = MultiVCS(n_usp=2, devices=2, flit=_stochastic(1e-5))
+    topo, _ = v.build_topology()
+    g = topo.build()
+    link = ~np.asarray(g.chan_is_service)
+    assert np.asarray(g.chan_rel_stochastic)[link].all()
+    assert (np.asarray(g.chan_retrain_threshold)[link] == 2).all()
+
+
+# ---------------------------------------------------------------------------
+# retraining stalls + bench gates
+# ---------------------------------------------------------------------------
+
+def test_retraining_stalls_delay_schedule():
+    """Same seeded fault history; enabling retraining must strictly delay
+    completion once any event fires (threshold 0 draws identical replay
+    totals, so the runs differ only by link-down intervals)."""
+    wl_off = _wl(_stochastic(3e-4, retrain_threshold=0), n=200)
+    wl_on = _wl(_stochastic(3e-4), n=200)
+    assert np.array_equal(np.asarray(wl_off.hops.extra_wire_bytes),
+                          np.asarray(wl_on.hops.extra_wire_bytes))
+    assert not np.asarray(wl_off.hops.retrain_after_ps).any()
+    assert np.asarray(wl_on.hops.retrain_after_ps).any()
+    s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps,
+                     max_rounds=160)
+    s_on = simulate(wl_on.hops, wl_on.channels, wl_on.issue_ps,
+                    max_rounds=160)
+    assert int(jnp.max(s_on.complete)) > int(jnp.max(s_off.complete))
+    assert bool((s_on.complete >= s_off.complete).all())
+
+
+def test_bench_zero_ber_equivalence_gate():
+    from benchmarks.bench_link_reliability import run_zero_ber_equivalence
+
+    assert run_zero_ber_equivalence(n=300)
+
+
+def test_bench_tail_divergence_gate():
+    """The p99-p50 spread grows with BER in stochastic mode, and at high
+    BER it far exceeds the expected-value spread — replay bursts and
+    retraining stalls land on unlucky packets, which the deterministic
+    uniform stretch structurally cannot express."""
+    from benchmarks.bench_link_reliability import run_tail_sweep
+
+    sweep = run_tail_sweep(bers=(0.0, 1e-5, 1e-4), n=600)
+    spreads = [r["stochastic_p99_ns"] - r["stochastic_p50_ns"]
+               for r in sweep]
+    assert spreads[0] < spreads[1] < spreads[2]
+    hi = sweep[-1]
+    assert hi["stochastic_p99_ns"] - hi["stochastic_p50_ns"] \
+        > 2 * (hi["expected_p99_ns"] - hi["expected_p50_ns"])
+    # ber-0 rows are the deterministic schedule in both modes
+    lo = sweep[0]
+    assert lo["stochastic_p99_ns"] == lo["expected_p99_ns"]
+    assert lo["stochastic_p50_ns"] == lo["expected_p50_ns"]
+
+
+def test_bench_retrain_stall_gate():
+    from benchmarks.bench_link_reliability import run_retrain_stall
+
+    st = run_retrain_stall(ber=1e-4, n=300)
+    assert st["events"] > 0
+    assert st["makespan_on_ns"] > st["makespan_off_ns"]
