@@ -25,8 +25,9 @@ reports what the deterministic model cannot express:
     fault history must strictly delay the makespan once any event fires.
 
 The stochastic sweep still runs as one vmapped jit: the sampled outcomes
-live in per-hop ``Hops`` tables (not channel tables), so per-BER samples
-stack along a leading axis over the same hop layout.
+live in per-hop ``Hops`` tables (not channel tables), so the per-BER
+tables — including the full-duplex retraining-mirror markers the build
+path inserts — pad to one width and stack along a leading axis.
 """
 
 from __future__ import annotations
@@ -39,7 +40,8 @@ from repro.core import topology as T
 from repro.core.calibration import PCIE6_X16_RAW_MBPS
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import simulate
-from repro.core.link_layer import (FlitConfig, broadcast_reliability_tables,
+from repro.core.link_layer import (FlitConfig, apply_retrain_markers,
+                                   broadcast_reliability_tables,
                                    replay_overhead_ppm, sample_hop_tables)
 
 from .common import Row, Timer
@@ -49,16 +51,23 @@ RETRAIN_THRESHOLD = 2
 RETRAIN_PS = 1_000_000  # 1 us link-down per retraining event
 
 
-def _bus_workload(flit, n: int, payload: int = 944, seed: int = 11):
-    """§IV validation system, saturated open loop (944 B = 4 full flits)."""
+def _bus_workload(flit, n: int, payload: int = 944, seed: int = 11,
+                  with_graph: bool = False):
+    """§IV validation system, saturated open loop (944 B = 4 full flits).
+
+    ``with_graph=True`` also returns the built graph, so callers that need
+    channel metadata (e.g. ``chan_pair`` for marker insertion) read it
+    from the exact object the workload was lowered against.
+    """
     topo = T.with_flit(T.single_bus(n_mems=4, bw_MBps=PCIE6_X16_RAW_MBPS),
                        flit)
+    graph = topo.build()
     spec = RequesterSpec(node=0, n_requests=n, targets=[2, 3, 4, 5],
                          pattern="uniform", read_ratio=0.5,
                          issue_interval_ps=100, payload_bytes=payload,
                          seed=seed)
-    return build_workload(topo.build(), [spec], header_bytes=64,
-                          warmup_frac=0.0)
+    wl = build_workload(graph, [spec], header_bytes=64, warmup_frac=0.0)
+    return (wl, graph) if with_graph else wl
 
 
 def _stochastic_cfg(ber: float, rel_seed: int = 0,
@@ -76,7 +85,7 @@ def run_tail_sweep(bers=BERS, n: int = 1500, rel_seed: int = 0,
     stochastic mode vmaps over the stacked per-hop sampled tables — both
     sweeps are one jit each over an identical hop layout.
     """
-    wl = _bus_workload(FlitConfig("flit256"), n)
+    wl, graph = _bus_workload(FlitConfig("flit256"), n, with_graph=True)
     link = jnp.asarray(np.asarray(wl.channels.flit_size) > 0)
 
     def one_expected(ppm):
@@ -89,32 +98,52 @@ def run_tail_sweep(bers=BERS, n: int = 1500, rel_seed: int = 0,
     comp_e, conv_e = jax.vmap(one_expected)(ppms)
     assert bool(conv_e.all()), "expected-mode sweep failed to converge"
 
-    # stochastic: same hop layout per BER, only the sampled tables differ —
-    # sample them straight off the shared workload's arrays (identical
-    # streams to a per-BER build: same channel ids, seeds, and parameters)
+    # stochastic: sample each BER's tables off the shared workload's arrays
+    # (identical streams to a per-BER build: same channel ids, seeds and
+    # parameters) and mirror the full-duplex retraining stalls exactly as
+    # the build path does — each per-BER table is then bit-identical to a
+    # real build.  Marker insertion widens rows per BER, so the tables are
+    # padded to one width and the whole Hops pytree vmaps in one jit.
     c = int(wl.channels.bw_MBps.shape[0])
     chan_np = np.asarray(wl.hops.channel)
     nbytes_np = np.asarray(wl.hops.nbytes)
     valid_np = np.asarray(wl.hops.valid)
     link_np = np.asarray(wl.channels.flit_size) > 0
-    extras, retrains = [], []
+    chan_pair = graph.chan_pair
+    hops_by_ber = []
     for b in bers:
         extra, retrain = sample_hop_tables(
             chan_np, nbytes_np, valid_np,
             **broadcast_reliability_tables(_stochastic_cfg(b, rel_seed), c,
                                            link_np))
-        extras.append(extra)
-        retrains.append(retrain)
+        hops_by_ber.append(apply_retrain_markers(
+            wl.hops._replace(extra_wire_bytes=jnp.asarray(extra),
+                             retrain_after_ps=jnp.asarray(retrain)),
+            chan_pair))
     ch_s = wl.channels._replace(
         replay_ppm=jnp.zeros_like(wl.channels.replay_ppm))
 
-    def one_stochastic(extra, retrain):
-        h = wl.hops._replace(extra_wire_bytes=extra, retrain_after_ps=retrain)
+    h_max = max(h.channel.shape[1] for h in hops_by_ber)
+    fills = dict(channel=-1, nbytes=0, direction=0, row=-1,
+                 fixed_after_ps=0, is_payload=False, valid=False,
+                 extra_wire_bytes=0, retrain_after_ps=0)
+
+    def pad(h):
+        return h._replace(**{
+            f: jnp.asarray(np.pad(
+                np.asarray(getattr(h, f)),
+                ((0, 0), (0, h_max - getattr(h, f).shape[1])),
+                constant_values=v))
+            for f, v in fills.items()})
+
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[pad(h) for h in hops_by_ber])
+
+    def one_stochastic(h):
         s = simulate(h, ch_s, wl.issue_ps, max_rounds=max_rounds)
         return s.complete, s.converged
 
-    comp_s, conv_s = jax.vmap(one_stochastic)(
-        jnp.asarray(np.stack(extras)), jnp.asarray(np.stack(retrains)))
+    comp_s, conv_s = jax.vmap(one_stochastic)(stacked)
     assert bool(conv_s.all()), "stochastic sweep failed to converge"
 
     out = []
@@ -149,11 +178,14 @@ def run_retrain_stall(ber: float = 1e-4, n: int = 800,
     same stream, so the two runs share every sampled replay burst and
     differ only by the link-down intervals.
     """
+    from repro.core.link_layer import strip_retrain_markers
+
     wl_off = _bus_workload(_stochastic_cfg(ber, rel_seed,
                                            retrain_threshold=0), n)
     wl_on = _bus_workload(_stochastic_cfg(ber, rel_seed), n)
-    assert np.array_equal(np.asarray(wl_off.hops.extra_wire_bytes),
-                          np.asarray(wl_on.hops.extra_wire_bytes))
+    assert np.array_equal(
+        np.asarray(wl_off.hops.extra_wire_bytes),
+        np.asarray(strip_retrain_markers(wl_on.hops).extra_wire_bytes))
     s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps,
                      max_rounds=160)
     s_on = simulate(wl_on.hops, wl_on.channels, wl_on.issue_ps,
@@ -176,9 +208,12 @@ def run(quick: bool = False) -> list[Row]:
         ok = run_zero_ber_equivalence(min(n, 800))
     rows.append(Row("link_reliability/zero_ber_equivalence", t.us,
                     f"stochastic_matches_deterministic={ok}"))
+    assert ok, "zero-BER stochastic != deterministic (acceptance gate)"
 
     with Timer() as t:
-        sweep = run_tail_sweep(BERS[:3] if quick else BERS, n=n)
+        # quick mode keeps the endpoints: the divergence is decisive at the
+        # top BER, not in the middle of the range
+        sweep = run_tail_sweep((0.0, 1e-5, 1e-4) if quick else BERS, n=n)
     for r in sweep:
         rows.append(Row(f"link_reliability/tail/ber{r['ber']:g}", t.us,
                         f"exp_p50={r['expected_p50_ns']:.0f};"
@@ -188,11 +223,13 @@ def run(quick: bool = False) -> list[Row]:
     spread0 = sweep[0]["stochastic_p99_ns"] - sweep[0]["stochastic_p50_ns"]
     spread1 = sweep[-1]["stochastic_p99_ns"] - sweep[-1]["stochastic_p50_ns"]
     spread_e = sweep[-1]["expected_p99_ns"] - sweep[-1]["expected_p50_ns"]
+    diverges = spread1 > spread0 and spread1 > spread_e
     rows.append(Row("link_reliability/tail_divergence", t.us,
                     f"p99_minus_p50_ber0={spread0:.0f};"
                     f"p99_minus_p50_top={spread1:.0f};"
                     f"expected_top={spread_e:.0f};"
-                    f"diverges={spread1 > spread0 and spread1 > spread_e}"))
+                    f"diverges={diverges}"))
+    assert diverges, "stochastic tail fails to diverge (acceptance gate)"
 
     with Timer() as t:
         st = run_retrain_stall(n=min(n, 800))
@@ -201,4 +238,6 @@ def run(quick: bool = False) -> list[Row]:
                     f"makespan_off={st['makespan_off_ns']:.0f};"
                     f"makespan_on={st['makespan_on_ns']:.0f};"
                     f"stalls={st['makespan_on_ns'] > st['makespan_off_ns']}"))
+    assert st["makespan_on_ns"] > st["makespan_off_ns"], \
+        "retraining fails to stall the schedule (acceptance gate)"
     return rows

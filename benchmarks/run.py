@@ -23,6 +23,7 @@ MODULES = (
     ("full_duplex", "benchmarks.bench_full_duplex"),
     ("link_layer", "benchmarks.bench_link_layer"),
     ("link_reliability", "benchmarks.bench_link_reliability"),
+    ("coherence_fabric", "benchmarks.bench_coherence_fabric"),
     ("traces", "benchmarks.bench_traces"),
     ("coherence_modes", "benchmarks.bench_coherence_modes"),
     ("fabric", "benchmarks.bench_fabric"),
@@ -42,6 +43,12 @@ def main() -> None:
     import importlib
 
     t0 = time.time()
+    failed: list[str] = []
+    unknown = only - {name for name, _ in MODULES}
+    if unknown:
+        # a typo in --only must not silently skip an acceptance gate
+        print(f"unknown bench names: {sorted(unknown)}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     for name, modname in MODULES:
         if only and name not in only:
@@ -50,16 +57,23 @@ def main() -> None:
             mod = importlib.import_module(modname)
         except ImportError as e:  # pragma: no cover
             print(f"{name}/import_error,0.0,{e}")
+            failed.append(name)
             continue
         try:
             rows = mod.run(quick=args.quick)
-        except Exception as e:  # pragma: no cover
+        except Exception as e:
             print(f"{name}/run_error,0.0,{type(e).__name__}:{e}")
+            failed.append(name)
             continue
         for r in rows:
             print(r.csv())
             sys.stdout.flush()
     print(f"total_wall_s,{time.time() - t0:.1f},")
+    if failed:
+        # embedded acceptance gates (AssertionErrors in bench run()) must
+        # fail the CI smoke step, not just print a run_error row
+        print(f"failed,{len(failed)},{';'.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -29,8 +29,12 @@ from .engine import (  # noqa: E402,F401
 from .devices import RequesterSpec, Workload, build_workload  # noqa: E402,F401
 from . import calibration, traces, routing, snoop_filter  # noqa: E402,F401
 from .snoop_filter import (  # noqa: E402,F401
-    SFConfig, CacheConfig, simulate_sf, POLICIES,
+    SFConfig, CacheConfig, SFEvents, simulate_sf, POLICIES,
     make_skewed_stream, make_sequential_stream,
+)
+from . import coherence_traffic  # noqa: E402,F401
+from .coherence_traffic import (  # noqa: E402,F401
+    CoherenceFabricSpec, CoupledResult, lower_coherence, simulate_coupled,
 )
 from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
 from . import fabric_model, autotune, vcs  # noqa: E402,F401

@@ -57,6 +57,9 @@ FLIT68_PAYLOAD_B = 64
 # link-level Go-Back-N replay / credit-return loop latency.
 FEC_LATENCY_PS = 2 * NS
 CRC_REPLAY_RTT_PS = 100 * NS
+# Credit-return DLLP: 6 B of DLLP payload + framing, modeled as 8 logical
+# bytes (one flit on the wire once quantized) per credit-return window.
+CREDIT_DLLP_B = 8
 # Link retraining (recovery) interval: when CRC replays storm past the retry
 # threshold the link drops to Recovery and re-equalizes — a microsecond-scale
 # stall during which the channel grants nothing (Das Sharma, arXiv 2306.11227

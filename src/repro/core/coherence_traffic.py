@@ -1,0 +1,376 @@
+"""Fabric-coupled device coherence: BISnp/BIRsp/InvBlk as fabric traffic.
+
+The snoop-filter reproduction (`core.snoop_filter`) runs the DCOH protocol
+against an analytic closed-loop timing model — an *isolated* device on an
+infinite bus, exactly the paper's §V-B setup.  Real CXL.mem coherence is
+not isolated: BISnp/BIRsp are transactions on the same links as demand
+traffic (Das Sharma et al., arXiv 2306.11227), and coherence traffic
+contends with the demand traffic it serializes against (Cohet, arXiv
+2511.23011).  This module closes that loop against the tensorized FCFS
+engine:
+
+  * **Event lowering** — the scan's dense per-request `SFEvents` log
+    (hit/miss, BISnp target owners, InvBlk run length, writeback lines)
+    lowers onto a `FabricGraph` as one hop chain per request: demand
+    request hops requester→device, then per snooped owner a BISnp leg
+    device→owner (reverse-direction traffic — it shares channels with
+    demand *responses*, exercising the full-duplex asymmetry of §V-D)
+    and a BIRsp leg owner→device (carrying writeback bytes), then the
+    endpoint service hop and the response hops back.  Cache hits lower to
+    empty rows; everything is co-scheduled with any background demand
+    workload by ``engine.simulate`` and mirrored exactly by the
+    `ref_des` oracle (device-initiated hops are ordinary hop records — the
+    oracle needs no special case, which is the point of the hop-table
+    contract).
+
+  * **Outer fixpoint** — SF service time depends on fabric round trips,
+    which depend on congestion, which depends on when the SF issues.  The
+    same control-loop shape as `routing.adaptive`: simulate the fabric,
+    measure each miss's round trip, feed it back as the request's SF
+    stall time (`simulate_sf(fabric_lat_ps=...)`), re-derive issue
+    times, iterate to convergence.  Protocol *decisions* are functions
+    of stream order only (never of latencies), so the event log — and
+    therefore the hop layout — is a fixpoint invariant; only issue times
+    and measured latencies iterate.
+
+The isolated analytic mode stays the default everywhere: nothing here is
+on any path unless `simulate_coupled` is called, and the §V-B/§V-C
+reproductions are bit-for-bit untouched.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import link_layer
+from .devices import Workload, finish_hops, marker_column_map, packetize
+from .engine import Hops, Schedule, make_channels, simulate_auto
+from .snoop_filter import CacheConfig, SFConfig, SFEvents, SFResult, simulate_sf
+from .topology import SWITCH, FabricGraph
+
+
+@dataclass(frozen=True)
+class CoherenceFabricSpec:
+    """Placement of the DCOH protocol onto a fabric.
+
+    dev_node      the device (MEMORY node) whose HDM the stream targets —
+                  it owns the SF and initiates BISnp traffic.
+    req_nodes     fabric node of each requester id (REQUESTER nodes).
+    header_bytes  BISnp/BIRsp/demand-header packet size (CXL.mem carries
+                  them as header-class slots).
+    max_snoop     snoop legs lowered per request; owners beyond it are
+                  dropped from the hop table (0 = all requesters, the
+                  exact default).
+    """
+
+    dev_node: int
+    req_nodes: tuple[int, ...]
+    header_bytes: int = 16
+    max_snoop: int = 0
+
+    def n_snoop(self) -> int:
+        return self.max_snoop if self.max_snoop > 0 else len(self.req_nodes)
+
+
+class CoherenceLowering(NamedTuple):
+    """Dense hop tables for one event log + the column map to read the
+    schedule back.  The ``*_cols`` fields index the *logical* (pre-marker)
+    layout; ``col_map[j, i]`` translates logical column ``i`` of row ``j``
+    to its physical column in ``hops`` (identity unless the graph samples
+    retraining stalls, whose mirror markers shift columns per row)."""
+
+    hops: Hops
+    miss: np.ndarray          # (T,) bool — rows with fabric traffic
+    fwd_cols: int             # demand request hops span [0, fwd_cols)
+    snoop_cols: int           # per-leg hop span (device->owner == owner->device)
+    n_snoop: int              # snoop slots per request
+    svc_col: int              # endpoint service hop column (logical)
+    col_map: np.ndarray       # (T, logical H) -> physical column
+    n_cols: int               # total physical hop columns (markers included)
+
+
+class CoupledResult(NamedTuple):
+    sf: SFResult              # SF view under fabric-measured stall times
+    events: SFEvents          # protocol decisions (fixpoint invariant)
+    schedule: Schedule        # fabric schedule of the final iteration
+    lowering: CoherenceLowering
+    fabric_lat_ps: jnp.ndarray   # (T,) measured miss round trips
+    bisnp_lat_ps: jnp.ndarray    # (T, n_snoop) per-BISnp round trips
+    issue_ps: jnp.ndarray        # (T,) fabric issue times of the final pass
+    iters: int
+    converged: bool
+    used_oracle: bool
+
+
+def _route_chans(graph: FabricGraph, src: int, dst: int):
+    """[(channel, direction, fixed_after)] of the default route src -> dst."""
+    path = graph.route(src, dst)
+    sw_ps = graph.topo.switching_ps
+    out = []
+    for u, v in zip(path[:-1], path[1:]):
+        c, d = graph.edge_channel(u, v)
+        fixed = int(graph.chan_fixed_ps[c]) + (
+            sw_ps if graph.topo.kinds[v] == SWITCH else 0)
+        out.append((c, d, fixed))
+    return out
+
+
+def lower_coherence(graph: FabricGraph, spec: CoherenceFabricSpec,
+                    sf_cfg: SFConfig, addr, is_write, rid,
+                    events: SFEvents) -> CoherenceLowering:
+    """Lower a protocol event log onto the fabric as per-request hop chains.
+
+    Row layout (fixed shape; unused spans are invalid pass-through hops):
+
+        [demand request] [BISnp out | BIRsp back] * n_snoop [service] [response]
+
+    The chain order is the protocol order: the DCOH collects every BIRsp
+    before serving the demand miss.  All writeback bytes ride the first
+    snooped owner's BIRsp leg, and the InvBlk response-assembly
+    serialization (the §V-C superlinear term, same formula as the isolated
+    model) lands on that leg's last hop.  Stochastic link reliability, if
+    the graph carries it, samples per-hop tables and mirrors full-duplex
+    retraining stalls exactly as `devices.build_workload` does.
+
+    Only cache *misses* lower to fabric traffic.  Write-upgrade BISnps on
+    local-cache hits are counted by ``SFResult.bisnp_events`` (and appear
+    in ``SFEvents.bisnp_mask``) but stay off the fabric — the isolated
+    model's "hits never leave the requester" timing semantics, preserved
+    so coupled and isolated modes agree on every protocol decision.
+    """
+    addr = np.asarray(addr)
+    is_write = np.asarray(is_write, bool)
+    rid = np.asarray(rid)
+    hit = np.asarray(events.cache_hit)
+    mask = np.asarray(events.bisnp_mask)
+    wb = np.asarray(events.wb_lines)
+    blk = np.asarray(events.invblk_len)
+    T = int(hit.shape[0])
+    K = spec.n_snoop()
+    ep = graph.topo.endpoint
+    hdr = spec.header_bytes
+    line = sf_cfg.line_bytes
+
+    to_dev = [_route_chans(graph, rq, spec.dev_node) for rq in spec.req_nodes]
+    to_req = [_route_chans(graph, spec.dev_node, rq) for rq in spec.req_nodes]
+    # one span width for every leg: forward and reverse routes may pick
+    # different equal-cost paths (next-hops are chosen per direction), so
+    # a direction-asymmetric fabric can have unequal hop counts
+    Fmax = Smax = max(max(len(p) for p in to_dev),
+                      max(len(p) for p in to_req))
+    svc = Fmax + 2 * K * Smax
+    H = svc + 1 + Fmax
+
+    chan = np.full((T, H), -1, np.int32)
+    nbytes = np.zeros((T, H), np.int64)
+    direction = np.zeros((T, H), np.int8)
+    row_id = np.full((T, H), -1, np.int32)
+    fixed_after = np.zeros((T, H), np.int64)
+    is_payload = np.zeros((T, H), bool)
+    valid = np.zeros((T, H), bool)
+
+    def fill_leg(j, k0, leg, nb, payload_flag):
+        for i, (c, d, fx) in enumerate(leg):
+            chan[j, k0 + i] = c
+            nbytes[j, k0 + i] = nb
+            direction[j, k0 + i] = d
+            fixed_after[j, k0 + i] = fx
+            is_payload[j, k0 + i] = payload_flag
+            valid[j, k0 + i] = True
+        return k0 + len(leg)
+
+    for j in range(T):
+        if hit[j]:
+            continue                       # hits never reach the fabric
+        r = int(rid[j])
+        fwd_b, bwd_b, fwd_pay, bwd_pay = packetize(
+            "esf", bool(is_write[j]), line, hdr)
+        fill_leg(j, 0, to_dev[r], fwd_b, fwd_pay)
+        owners = [b for b in range(len(spec.req_nodes))
+                  if (int(mask[j]) >> b) & 1][:K]
+        for k, o in enumerate(owners):
+            k0 = Fmax + 2 * k * Smax
+            end = fill_leg(j, k0, to_req[o], hdr, False)      # BISnp out
+            fixed_after[j, end - 1] += sf_cfg.t_cache_ps      # owner probe
+            back_b = hdr + (int(wb[j]) * line if k == 0 else 0)
+            end = fill_leg(j, k0 + Smax, to_dev[o], back_b,
+                           k == 0 and int(wb[j]) > 0)         # BIRsp back
+            if k == 0:
+                extra = max(int(blk[j]) - 1, 0)
+                fixed_after[j, end - 1] += (extra * sf_cfg.t_cache_ps
+                                            + extra * extra
+                                            * sf_cfg.probe_conflict_ps)
+        bank = int(addr[j]) % ep.banks
+        chan[j, svc] = graph.service_channel(spec.dev_node, bank)
+        nbytes[j, svc] = line
+        row_id[j, svc] = (int(addr[j]) // ep.lines_per_row) % (1 << 30)
+        fixed_after[j, svc] = ep.fixed_ps
+        is_payload[j, svc] = True
+        valid[j, svc] = True
+        fill_leg(j, svc + 1, to_req[r], bwd_b, bwd_pay)
+
+    # distinct reliability stream salt: coherence rows are co-scheduled
+    # with demand workloads sampled from the unsalted streams, and the two
+    # must draw independent fault histories
+    hops = finish_hops(graph, link_layer.normalize(None), chan, nbytes,
+                       direction, row_id, fixed_after, is_payload, valid,
+                       stream_salt=0x636F68)   # "coh"
+    return CoherenceLowering(
+        hops=hops, miss=~hit, fwd_cols=Fmax, snoop_cols=Smax, n_snoop=K,
+        svc_col=svc, col_map=marker_column_map(hops),
+        n_cols=int(hops.channel.shape[1]),
+    )
+
+
+def bisnp_latencies(sched: Schedule, low: CoherenceLowering) -> jnp.ndarray:
+    """Per-request, per-slot BISnp round trips: arrival after the BIRsp leg
+    minus arrival at the BISnp leg (0 for unused slots — invalid hops pass
+    arrivals through unchanged).  Logical columns go through ``col_map``,
+    so the read is exact even when retraining markers shifted the rows.
+    A hop's arrival is unchanged by the marker *behind* it, so mapping the
+    logical column to its physical hop indexes the same arrival; the
+    one-past-the-end logical column maps to the physical end column."""
+    t = low.col_map.shape[0]
+    arrive = sched.arrive[:t]            # background rows ride behind
+    cm = np.concatenate(
+        [low.col_map, np.full((t, 1), low.n_cols, np.int64)], axis=1)
+    outs = []
+    for k in range(low.n_snoop):
+        k0 = low.fwd_cols + 2 * k * low.snoop_cols
+        k1 = k0 + 2 * low.snoop_cols
+        a0 = jnp.take_along_axis(arrive, jnp.asarray(cm[:, [k0]]),
+                                 axis=1)[:, 0]
+        a1 = jnp.take_along_axis(arrive, jnp.asarray(cm[:, [k1]]),
+                                 axis=1)[:, 0]
+        outs.append(a1 - a0)
+    return jnp.stack(outs, axis=1)
+
+
+def concat_background(low: CoherenceLowering, issue_ps,
+                      background: "Workload | None"):
+    """Stack the coherence rows (first) with a background demand Workload
+    built on the same graph, padding hop columns and reliability tables.
+    Returns ``(hops, issue)`` for the engine."""
+    if background is None:
+        return low.hops, jnp.asarray(issue_ps)
+    a, b = low.hops, background.hops
+    ha, hb = a.channel.shape[1], b.channel.shape[1]
+    h = max(ha, hb)
+
+    def pad(x, fill):
+        x = np.asarray(x)
+        if x.shape[1] == h:
+            return x
+        return np.pad(x, ((0, 0), (0, h - x.shape[1])), constant_values=fill)
+
+    def join(name, fill):
+        return jnp.asarray(np.concatenate(
+            [pad(getattr(a, name), fill), pad(getattr(b, name), fill)]))
+
+    hops = Hops(
+        channel=join("channel", -1), nbytes=join("nbytes", 0),
+        direction=join("direction", 0), row=join("row", -1),
+        fixed_after_ps=join("fixed_after_ps", 0),
+        is_payload=join("is_payload", False), valid=join("valid", False),
+    )
+    if a.extra_wire_bytes is not None or b.extra_wire_bytes is not None:
+        def rel(x, name):
+            f = getattr(x, name)
+            return (np.asarray(f) if f is not None
+                    else np.zeros(np.asarray(x.channel).shape, np.int64))
+
+        hops = hops._replace(
+            extra_wire_bytes=jnp.asarray(np.concatenate(
+                [pad(rel(a, "extra_wire_bytes"), 0),
+                 pad(rel(b, "extra_wire_bytes"), 0)])),
+            retrain_after_ps=jnp.asarray(np.concatenate(
+                [pad(rel(a, "retrain_after_ps"), 0),
+                 pad(rel(b, "retrain_after_ps"), 0)])),
+        )
+    issue = jnp.concatenate(
+        [jnp.asarray(issue_ps), jnp.asarray(background.issue_ps)])
+    return hops, issue
+
+
+def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
+                     cache_cfg: CacheConfig, graph: FabricGraph,
+                     spec: CoherenceFabricSpec, n_requesters: int = 1,
+                     background: "Workload | None" = None,
+                     max_iters: int = 8, tol_ps: int = 0,
+                     max_rounds: int = 0) -> CoupledResult:
+    """Fabric-coupled DCOH simulation (the §V-B/§V-C studies with the
+    infinite bus replaced by real routed CXL traffic).
+
+    Outer fixpoint (the `routing.adaptive` control-loop shape): (1) run
+    the SF scan with the current per-request stall times (the analytic
+    constants seed the first pass), (2) lower its event log + issue
+    clocks onto the fabric and co-schedule with ``background`` demand
+    traffic, (3) feed each miss's measured round trip back as its stall
+    time.  Decisions never change across iterations (stream-order
+    property), so the lowering happens once; only issue times and
+    latencies iterate.  Convergence: max |lat - lat_prev| <= tol_ps.
+    """
+    if max_iters < 1:
+        raise ValueError("max_iters must be >= 1")
+    addr_j = jnp.asarray(addr)
+    wr_j = jnp.asarray(is_write)
+    rid_j = jnp.asarray(rid)
+    channels = make_channels(graph, graph.topo.endpoint.row_hit_extra_ps,
+                             graph.topo.endpoint.row_miss_extra_ps)
+
+    res, ev = simulate_sf(addr_j, wr_j, rid_j, sf_cfg, cache_cfg,
+                          n_requesters=n_requesters, return_events=True)
+    low = lower_coherence(graph, spec, sf_cfg, addr, is_write, rid, ev)
+    miss = jnp.asarray(low.miss)
+    T = int(miss.shape[0])
+    # hop tables are a fixpoint invariant — concat with the background once;
+    # only the issue vector changes across iterations
+    hops_all, _ = concat_background(low, ev.fab_issue_ps, background)
+    bg_issue = (None if background is None
+                else jnp.asarray(background.issue_ps))
+
+    fab = None
+    sched = None
+    used_oracle = False
+    iters = 0
+    converged = False
+    for iters in range(1, max_iters + 1):
+        if fab is not None:
+            res, ev = simulate_sf(addr_j, wr_j, rid_j, sf_cfg, cache_cfg,
+                                  n_requesters=n_requesters,
+                                  fabric_lat_ps=fab, return_events=True)
+        issue_all = (ev.fab_issue_ps if bg_issue is None
+                     else jnp.concatenate([ev.fab_issue_ps, bg_issue]))
+        sched, used_oracle = simulate_auto(hops_all, channels, issue_all,
+                                           max_rounds=max_rounds)
+        new_fab = jnp.where(miss, sched.complete[:T] - issue_all[:T],
+                            jnp.int64(0))
+        if fab is not None and int(jnp.max(jnp.abs(new_fab - fab))) <= tol_ps:
+            fab = new_fab
+            converged = True
+            break
+        fab = new_fab
+
+    # On exact convergence (tol 0) the loop's last SF/fabric pair already
+    # used the final ``fab`` — every reported field is consistent as is.
+    # Otherwise (tolerance break or max_iters limit cycle) run one final
+    # SF + fabric pass so sf, schedule, bisnp_lat_ps and issue_ps all
+    # belong to the same iteration.
+    if not (converged and tol_ps == 0):
+        res, ev = simulate_sf(addr_j, wr_j, rid_j, sf_cfg, cache_cfg,
+                              n_requesters=n_requesters, fabric_lat_ps=fab,
+                              return_events=True)
+        issue_all = (ev.fab_issue_ps if bg_issue is None
+                     else jnp.concatenate([ev.fab_issue_ps, bg_issue]))
+        sched, used_oracle = simulate_auto(hops_all, channels, issue_all,
+                                           max_rounds=max_rounds)
+    return CoupledResult(
+        sf=res, events=ev, schedule=sched, lowering=low, fabric_lat_ps=fab,
+        bisnp_lat_ps=bisnp_latencies(sched, low),
+        issue_ps=ev.fab_issue_ps, iters=iters, converged=converged,
+        used_oracle=used_oracle,
+    )

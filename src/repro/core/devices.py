@@ -134,6 +134,89 @@ def _interleave(addr: np.ndarray, targets: Sequence[int], policy: str) -> np.nda
     raise ValueError(f"unknown interleave policy {policy!r}")
 
 
+def _credit_dllp_plan(graph: FabricGraph, override: link_layer.FlitConfig):
+    """Per-channel credit-DLLP emission tables, or None when disabled.
+
+    Returns (enabled mask, window flits, flit payload) — a channel emits
+    one `calibration.CREDIT_DLLP_B`-byte hop on its full-duplex pair
+    (`FabricGraph.chan_pair`) per ``window`` flits transmitted.  Minimal
+    version: half-duplex links (no pair) never emit.
+    """
+    has_pair = graph.chan_pair >= 0
+    if override.active:
+        if not override.credit_dllp:
+            return None
+        size, payload = override.geometry
+        mask = has_pair & ~graph.chan_is_service & (size > 0)
+        window = np.full(graph.n_channels, max(override.rx_credits, 1))
+        pay = np.full(graph.n_channels, max(payload, 1))
+    else:
+        mask = (np.asarray(graph.chan_credit_dllp, bool) & has_pair
+                & (graph.chan_flit_size > 0))
+        window = np.maximum(graph.chan_credit_window, 1)
+        pay = np.maximum(graph.chan_flit_payload, 1)
+    if not mask.any():
+        return None
+    return mask, window.astype(np.int64), pay.astype(np.int64)
+
+
+def finish_hops(graph: FabricGraph, flit_cfg: "link_layer.FlitConfig",
+                chan, nbytes, direction, row_id, fixed_after, is_payload,
+                valid, stream_salt: int = 0) -> Hops:
+    """Final build step shared by every hop-table producer: sample the
+    stochastic link-reliability tables (when the graph or override carries
+    them) and mirror full-duplex retraining stalls onto the paired channel
+    as link-down markers, then assemble the engine `Hops`.
+
+    Deterministic graphs return the arrays untouched (bit-exact layout).
+    ``stream_salt`` offsets the per-channel sampling seeds — hop tables
+    that will be co-scheduled with another table built from the same graph
+    (e.g. coherence rows alongside a background workload) must pass a
+    distinct salt, or the two tables replay byte-identical fault
+    histories instead of independent draws.
+    """
+    extra_wire = retrain_after = None
+    rel = _reliability_tables(graph, flit_cfg)
+    if rel is not None:
+        if stream_salt:
+            rel = dict(rel, rel_seed=np.asarray(rel["rel_seed"])
+                       + stream_salt)
+        extra_wire, retrain_after = link_layer.sample_hop_tables(
+            chan, nbytes, valid, **rel)
+        (chan, nbytes, direction, row_id, fixed_after, is_payload, valid,
+         extra_wire, retrain_after) = link_layer.insert_retrain_markers(
+            chan, nbytes, direction, row_id, fixed_after, is_payload,
+            valid, extra_wire, retrain_after, graph.chan_pair)
+    hops = Hops(
+        channel=jnp.asarray(chan), nbytes=jnp.asarray(nbytes),
+        direction=jnp.asarray(direction), row=jnp.asarray(row_id),
+        fixed_after_ps=jnp.asarray(fixed_after),
+        is_payload=jnp.asarray(is_payload), valid=jnp.asarray(valid),
+    )
+    if extra_wire is not None:
+        hops = hops._replace(extra_wire_bytes=jnp.asarray(extra_wire),
+                             retrain_after_ps=jnp.asarray(retrain_after))
+    return hops
+
+
+def marker_column_map(hops: Hops) -> np.ndarray:
+    """Map pre-marker hop columns to their post-`finish_hops` positions.
+
+    ``out[j, i]`` is the column the original hop ``(j, i)`` occupies in
+    the finished table (the identity when no markers were inserted) — the
+    remap consumers of a fixed column layout (e.g.
+    `coherence_traffic.bisnp_latencies`) apply to read the schedule back.
+    """
+    chan = np.asarray(hops.channel)
+    mk = link_layer.retrain_marker_mask(
+        chan, np.asarray(hops.nbytes), np.asarray(hops.valid),
+        None if hops.retrain_after_ps is None
+        else np.asarray(hops.retrain_after_ps))
+    h_old = chan.shape[1] - (int(mk.sum(axis=1).max()) if mk.any() else 0)
+    # stable argsort puts each row's non-marker columns first, in order
+    return np.argsort(mk, axis=1, kind="stable")[:, :h_old].astype(np.int64)
+
+
 def _reliability_tables(graph: FabricGraph, override: link_layer.FlitConfig):
     """Per-channel stochastic-sampling parameters, or None when every
     channel runs the deterministic expected-value model.
@@ -279,24 +362,63 @@ def build_workload(
             valid[j, k] = True
             k += 1
 
-    hops = Hops(
-        channel=jnp.asarray(channel), nbytes=jnp.asarray(nbytes),
-        direction=jnp.asarray(direction), row=jnp.asarray(row_id),
-        fixed_after_ps=jnp.asarray(fixed_after),
-        is_payload=jnp.asarray(is_payload), valid=jnp.asarray(valid),
-    )
+    # ---- credit-return DLLP traffic (FlitConfig(credit_dllp=True)) -------
+    # every credit-return window of flits transmitted on a full-duplex flit
+    # channel emits one DLLP-sized hop on the paired reverse channel, issued
+    # with the transaction that crossed the window boundary (build-time
+    # approximation) — credit starvation couples to reverse congestion.
+    dllp = _credit_dllp_plan(graph, flit_cfg)
+    if dllp is not None:
+        from .calibration import CREDIT_DLLP_B
+
+        d_mask, d_win, d_pay = dllp
+        cum = np.zeros(graph.n_channels, np.int64)
+        d_rows: list[tuple[int, int]] = []   # (issue_ps, reverse channel)
+        # accumulate in issue-time order, not build (requester-major) order,
+        # so each window's DLLP is stamped with the transaction that
+        # actually crossed it when several requesters share a channel
+        order = np.argsort([r["issue"] for r in rows], kind="stable")
+        for j in order:
+            for k in range(h):
+                c = channel[j, k]
+                if not valid[j, k] or c < 0 or not d_mask[c] \
+                        or nbytes[j, k] <= 0:
+                    continue
+                cum[c] += -(-nbytes[j, k] // d_pay[c])
+                while cum[c] >= d_win[c]:
+                    cum[c] -= d_win[c]
+                    d_rows.append((rows[j]["issue"], int(graph.chan_pair[c])))
+        if d_rows:
+            m = len(d_rows)
+            channel = np.vstack([channel, np.full((m, h), -1, np.int32)])
+            nbytes = np.vstack([nbytes, np.zeros((m, h), np.int64)])
+            direction = np.vstack([direction, np.zeros((m, h), np.int8)])
+            row_id = np.vstack([row_id, np.full((m, h), -1, np.int32)])
+            fixed_after = np.vstack([fixed_after, np.zeros((m, h), np.int64)])
+            is_payload = np.vstack([is_payload, np.zeros((m, h), bool)])
+            valid = np.vstack([valid, np.zeros((m, h), bool)])
+            for i, (iss, rc) in enumerate(d_rows):
+                channel[n + i, 0] = rc
+                nbytes[n + i, 0] = CREDIT_DLLP_B
+                # same per-hop fixed cost as every other hop on this path
+                # (flit_fec_ps is nonzero only on the override path; the
+                # graph-carried path bakes FEC into chan_fixed_ps)
+                fixed_after[n + i, 0] = graph.chan_fixed_ps[rc] + flit_fec_ps
+                valid[n + i, 0] = True
+                rows.append(dict(req=-1, mem=-1, write=False, addr=0,
+                                 issue=iss, payload=0, idx=n + i, ntgt=1,
+                                 measured=False))
+                paths.append([-1, -1])
+            alts = np.concatenate([alts, np.zeros(m, np.int64)])
+            n += m
+
     # stochastic link reliability: sample the per-hop replay/retraining
     # tables from the seeded per-channel streams (build time, like issue
-    # jitter, so sweeps can stack the sampled tables and vmap).  The
+    # jitter, so sweeps can stack the sampled tables and vmap) and mirror
+    # full-duplex retraining stalls onto the paired channel.  The
     # expected-value mode leaves Hops in the PR-1 layout untouched.
-    rel = _reliability_tables(graph, flit_cfg)
-    if rel is not None:
-        extra_wire, retrain_after = link_layer.sample_hop_tables(
-            channel, nbytes, valid, **rel)
-        hops = hops._replace(
-            extra_wire_bytes=jnp.asarray(extra_wire),
-            retrain_after_ps=jnp.asarray(retrain_after),
-        )
+    hops = finish_hops(graph, flit_cfg, channel, nbytes, direction, row_id,
+                       fixed_after, is_payload, valid)
     channels = make_channels(graph, ep.row_hit_extra_ps, ep.row_miss_extra_ps)
     if flit_cfg.active:
         channels = link_layer.apply_flit(

@@ -188,7 +188,13 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
             prev_chan, prev_depart, prev_dir, prev_row = carry
             chan, valid, arr, drn, row, ser, turn, rhit, rmiss, nbytes = x
         # zero-byte packets ride a side channel (e.g. DRAM command path):
-        # they pass through instantly and do not occupy or turn the bus
+        # they pass through instantly and do not occupy or turn the bus.
+        # Exception: a zero-byte hop carrying retrain_after_ps is a
+        # *link-down marker* (`link_layer.insert_retrain_markers`) — it
+        # still occupies nothing but pushes its channel's down_until to
+        # (arrival + retrain), mirroring a full-duplex partner's stall.
+        if has_retrain:
+            marker = valid & (nbytes == 0) & (retrain > 0)
         valid = valid & (nbytes > 0)
         same = chan == prev_chan
         gap = jnp.where(same & (drn != prev_dir), turn, 0)
@@ -208,17 +214,34 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
         depart = start + ser + row_extra
         start = jnp.where(valid, start, arr)
         depart = jnp.where(valid, depart, arr)
+        if not has_retrain:
+            new_carry = (
+                jnp.where(valid, chan, prev_chan),
+                jnp.where(valid, depart, prev_depart),
+                jnp.where(valid, drn, prev_dir),
+                jnp.where(valid & (row >= 0), row, prev_row),
+            )
+            return new_carry, (start, depart)
+        # a marker opening a segment initializes the channel state to "no
+        # previous item" (depart 0, row -2) so the next real hop sees a
+        # fresh channel plus the marker's down interval; mid-segment it
+        # leaves everything but down_until untouched.  Markers are only
+        # emitted for full-duplex pairs (turnaround 0, not row-managed),
+        # so the stored direction never creates a spurious turnaround.
+        head = marker & ~same
         new_carry = (
-            jnp.where(valid, chan, prev_chan),
-            jnp.where(valid, depart, prev_depart),
-            jnp.where(valid, drn, prev_dir),
-            jnp.where(valid & (row >= 0), row, prev_row),
+            jnp.where(valid | marker, chan, prev_chan),
+            jnp.where(valid, depart, jnp.where(head, jnp.int64(0),
+                                               prev_depart)),
+            jnp.where(valid, drn, jnp.where(head, drn, prev_dir)),
+            jnp.where(valid & (row >= 0), row,
+                      jnp.where(head, jnp.int32(-2), prev_row)),
         )
-        if has_retrain:
-            new_down = jnp.maximum(
-                seg_down, jnp.where(retrain > 0, depart + retrain,
-                                    jnp.int64(0)))
-            new_carry = new_carry + (jnp.where(valid, new_down, prev_down),)
+        new_down = jnp.maximum(
+            seg_down, jnp.where(retrain > 0, depart + retrain,
+                                jnp.int64(0)))
+        new_carry = new_carry + (
+            jnp.where(valid | marker, new_down, prev_down),)
         return new_carry, (start, depart)
 
     init = (jnp.int32(-1), jnp.int64(0), jnp.int8(-1), jnp.int32(-2))

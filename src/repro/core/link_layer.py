@@ -121,7 +121,18 @@ class FlitConfig:
     retrain_ps      link-down interval per retraining event; None = the
                     calibrated microsecond-scale `LINK_RETRAIN_PS`.  While
                     down, the channel grants nothing (per-channel
-                    ``down_until`` state carried in the engine scan).
+                    ``down_until`` state carried in the engine scan); the
+                    paired reverse direction of a full-duplex link goes
+                    down with it (retraining re-equalizes the physical
+                    link), mirrored onto the paired channel as zero-byte
+                    link-down marker hops at build time.
+    credit_dllp     model credit-return DLLPs as real traffic: every
+                    ``rx_credits`` flits transmitted on a full-duplex flit
+                    channel emit one ``CREDIT_DLLP_B``-byte hop on the
+                    paired reverse channel (a real flit on the wire), so
+                    credit starvation couples to reverse-direction
+                    congestion.  Off (default), credits stay a pure
+                    bandwidth cap — the byte-exact seed semantics.
     """
 
     mode: str = "none"
@@ -134,6 +145,7 @@ class FlitConfig:
     rel_seed: int = 0
     retrain_threshold: int = 0
     retrain_ps: int | None = None
+    credit_dllp: bool = False
 
     def __post_init__(self):
         if self.mode not in FLIT_GEOMETRY:
@@ -290,11 +302,22 @@ def sample_replays(n_flits: np.ndarray, p: float, retry_window: int,
     flits in flight behind it, so a hop of ``n`` flits carries
     ``W * NegBinomial(n, 1 - p)`` extra flit transmissions — whose mean,
     ``n * W * p / (1 - p)``, is exactly the expected-value model's
-    ``replay_ppm`` stretch.  Retraining events (a flit failing
-    ``retrain_threshold`` times consecutively, probability ``p**R`` per
-    flit) are sampled as an independent ``Binomial(n, p**R)`` draw per hop —
-    independent of the replay total, a documented approximation that keeps
-    sampling O(1) per hop instead of O(flits).
+    ``replay_ppm`` stretch.
+
+    Retraining events (a flit failing ``retrain_threshold`` times
+    consecutively) are *coupled to the sampled replay total*: iid
+    Geometric(p) per-flit failure counts are exactly (NegBinomial total,
+    uniform composition over flits), so conditional on the hop's total
+    failures ``f`` the probability any one flit reached ``R`` failures is
+    ``prod_{j<R} (f-j)/(n+f-1-j)`` — events are drawn
+    ``Binomial(n, that)``, clamped to the hard bound ``f // R``.  The
+    unclamped marginal event rate is exactly ``n * p**R`` (the clamp only
+    removes the rare Binomial overshoots past what the sampled failures
+    can explain, shaving it slightly below), a hop can no longer retrain
+    without having sampled the failures that caused it (the independence
+    approximation this replaces allowed that), and the replay draw itself
+    is byte-identical to before, so the stream is unchanged for any
+    ``retrain_threshold`` sharing a seed.
 
     Returns ``(extra_flits, retrain_events)`` int64 arrays shaped like
     ``n_flits``.
@@ -309,9 +332,14 @@ def sample_replays(n_flits: np.ndarray, p: float, retry_window: int,
     pos = n_flits > 0
     extra[pos] = rng.negative_binomial(n_flits[pos], 1.0 - p) * w
     if retrain_threshold > 0:
-        q = p ** retrain_threshold
-        if q > 0.0:
-            events[pos] = rng.binomial(n_flits[pos], q)
+        n = n_flits[pos]
+        f = extra[pos] // w                      # sampled failures per hop
+        r = retrain_threshold
+        q = np.ones(n.shape, dtype=np.float64)
+        for j in range(r):
+            q *= np.clip(f - j, 0, None) / np.maximum(n + f - 1 - j, 1)
+        ev = rng.binomial(n, q)
+        events[pos] = np.minimum(ev, f // r)
     return extra, events
 
 
@@ -383,6 +411,159 @@ def sample_hop_tables(chan: np.ndarray, nbytes: np.ndarray, valid: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Full-duplex retraining mirror (link-down marker hops)
+# ---------------------------------------------------------------------------
+# Retraining re-equalizes the physical link, so BOTH directions of a
+# full-duplex link stall together.  The engine's per-channel down-until
+# state is segment-local (one channel per scan segment), so the reverse
+# direction's stall is expressed as data: a zero-byte *link-down marker*
+# hop on the paired channel, inserted right after the triggering hop.  A
+# marker occupies nothing and turns nothing — it only pushes the paired
+# channel's ``down_until`` to (its arrival + retrain_after_ps).  Markers
+# are identified structurally: ``valid & nbytes == 0 & retrain_after_ps
+# > 0`` (see `engine._one_round` / `ref_des.simulate_ref`).
+
+def retrain_marker_mask(channel, nbytes, valid, retrain_after) -> np.ndarray:
+    """Boolean mask of link-down marker hops in a hop matrix."""
+    if retrain_after is None:
+        return np.zeros(np.asarray(channel).shape, dtype=bool)
+    return (np.asarray(valid, bool) & (np.asarray(nbytes) == 0)
+            & (np.asarray(retrain_after) > 0))
+
+
+def insert_retrain_markers(channel, nbytes, direction, row, fixed_after,
+                           is_payload, valid, extra_wire, retrain_after,
+                           chan_pair) -> tuple:
+    """Insert a link-down marker after every hop that samples a retraining
+    event on a channel with a full-duplex pair (``chan_pair[c] >= 0``).
+
+    The trigger's ``fixed_after`` moves onto the marker so the marker
+    arrives exactly at the trigger's departure (= the instant the link
+    drops) and downstream arrivals are unchanged.  Returns the ten arrays
+    with columns widened by the maximum per-row marker count; a hop matrix
+    with no triggering hops is returned unchanged (bit-exact layout).
+    """
+    chan_pair = np.asarray(chan_pair)
+    trigger = ((np.asarray(retrain_after) > 0) & np.asarray(valid, bool)
+               & (np.asarray(nbytes) > 0)
+               & (chan_pair[np.asarray(channel)] >= 0))
+    maxk = int(trigger.sum(axis=1).max()) if trigger.any() else 0
+    if maxk == 0:
+        return (channel, nbytes, direction, row, fixed_after, is_payload,
+                valid, extra_wire, retrain_after)
+    n, h = np.asarray(channel).shape
+    h2 = h + maxk
+    out = dict(
+        channel=np.full((n, h2), -1, np.int32),
+        nbytes=np.zeros((n, h2), np.int64),
+        direction=np.zeros((n, h2), np.int8),
+        row=np.full((n, h2), -1, np.int32),
+        fixed_after=np.zeros((n, h2), np.int64),
+        is_payload=np.zeros((n, h2), bool),
+        valid=np.zeros((n, h2), bool),
+        extra_wire=np.zeros((n, h2), np.int64),
+        retrain_after=np.zeros((n, h2), np.int64),
+    )
+    src = (channel, nbytes, direction, row, fixed_after, is_payload, valid,
+           extra_wire, retrain_after)
+    names = tuple(out)
+    for j in range(n):
+        k = 0
+        for i in range(h):
+            for name, arr in zip(names, src):
+                out[name][j, k] = arr[j, i]
+            k += 1
+            if trigger[j, i]:
+                out["channel"][j, k] = chan_pair[channel[j, i]]
+                out["valid"][j, k] = True
+                out["retrain_after"][j, k] = retrain_after[j, i]
+                out["fixed_after"][j, k] = fixed_after[j, i]
+                out["fixed_after"][j, k - 1] = 0
+                k += 1
+    return tuple(out[name] for name in names)
+
+
+def remove_retrain_markers(channel, nbytes, direction, row, fixed_after,
+                           is_payload, valid, extra_wire,
+                           retrain_after) -> tuple:
+    """Exact inverse of `insert_retrain_markers` (test/bench helper):
+    drop marker columns, hand each marker's ``fixed_after`` back to its
+    triggering hop, and left-justify to the original width."""
+    marker = retrain_marker_mask(channel, nbytes, valid, retrain_after)
+    if not marker.any():
+        return (channel, nbytes, direction, row, fixed_after, is_payload,
+                valid, extra_wire, retrain_after)
+    n, h2 = np.asarray(channel).shape
+    h = h2 - int(marker.sum(axis=1).max())
+    out = dict(
+        channel=np.full((n, h), -1, np.int32),
+        nbytes=np.zeros((n, h), np.int64),
+        direction=np.zeros((n, h), np.int8),
+        row=np.full((n, h), -1, np.int32),
+        fixed_after=np.zeros((n, h), np.int64),
+        is_payload=np.zeros((n, h), bool),
+        valid=np.zeros((n, h), bool),
+        extra_wire=np.zeros((n, h), np.int64),
+        retrain_after=np.zeros((n, h), np.int64),
+    )
+    src = (channel, nbytes, direction, row, fixed_after, is_payload, valid,
+           extra_wire, retrain_after)
+    names = tuple(out)
+    for j in range(n):
+        k = 0
+        for i in range(h2):
+            if marker[j, i]:
+                out["fixed_after"][j, k - 1] = fixed_after[j, i]
+                continue
+            if k >= h:
+                break
+            for name, arr in zip(names, src):
+                out[name][j, k] = arr[j, i]
+            k += 1
+    return tuple(out[name] for name in names)
+
+
+def _hops_arrays(hops) -> tuple:
+    """The nine insert/remove arrays of an engine ``Hops``, in contract
+    order (missing reliability tables become zeros)."""
+    n, h = np.asarray(hops.channel).shape
+    return (np.asarray(hops.channel), np.asarray(hops.nbytes),
+            np.asarray(hops.direction), np.asarray(hops.row),
+            np.asarray(hops.fixed_after_ps), np.asarray(hops.is_payload),
+            np.asarray(hops.valid),
+            np.zeros((n, h), np.int64) if hops.extra_wire_bytes is None
+            else np.asarray(hops.extra_wire_bytes),
+            np.zeros((n, h), np.int64) if hops.retrain_after_ps is None
+            else np.asarray(hops.retrain_after_ps))
+
+
+def _hops_from_arrays(arrs) -> "object":
+    import jax.numpy as jnp
+
+    from .engine import Hops
+
+    chan, nbytes, direction, row, fixed, pay, valid, extra, retrain = arrs
+    return Hops(
+        channel=jnp.asarray(chan), nbytes=jnp.asarray(nbytes),
+        direction=jnp.asarray(direction), row=jnp.asarray(row),
+        fixed_after_ps=jnp.asarray(fixed), is_payload=jnp.asarray(pay),
+        valid=jnp.asarray(valid), extra_wire_bytes=jnp.asarray(extra),
+        retrain_after_ps=jnp.asarray(retrain))
+
+
+def apply_retrain_markers(hops, chan_pair) -> "object":
+    """`insert_retrain_markers` at the engine-``Hops`` level."""
+    return _hops_from_arrays(
+        insert_retrain_markers(*_hops_arrays(hops), chan_pair))
+
+
+def strip_retrain_markers(hops) -> "object":
+    """`remove_retrain_markers` at the engine-``Hops`` level (the exact
+    inverse of the build path's marker insertion — test/bench helper)."""
+    return _hops_from_arrays(remove_retrain_markers(*_hops_arrays(hops)))
+
+
+# ---------------------------------------------------------------------------
 # Credit-based flow control
 # ---------------------------------------------------------------------------
 
@@ -429,6 +610,8 @@ class LoweredLink:
     retrain_threshold: int = 0  # consecutive failures forcing retraining
     retrain_ps: int = 0        # link-down interval per retraining event
     rel_seed: int = 0          # sampling stream seed
+    credit_dllp: bool = False  # emit credit-return DLLP reverse hops
+    credit_window: int = 0     # flits per credit-return DLLP
 
 
 def lower_link(bw_MBps: int, flit: "FlitConfig | str | None") -> LoweredLink:
@@ -451,6 +634,8 @@ def lower_link(bw_MBps: int, flit: "FlitConfig | str | None") -> LoweredLink:
         retrain_threshold=cfg.retrain_threshold if cfg.stochastic else 0,
         retrain_ps=cfg.retrain_down_ps if cfg.stochastic else 0,
         rel_seed=cfg.rel_seed,
+        credit_dllp=cfg.credit_dllp,
+        credit_window=max(cfg.rx_credits, 1),
     )
 
 

@@ -21,6 +21,14 @@ Semantics (must match `core.engine.simulate` bit-for-bit):
     interval at departure — subsequent grants on that channel start no
     earlier than ``down_until`` (the engine's scan-carry state, mirrored
     here as per-channel state so equality stays bit-exact per seed);
+  * a *link-down marker* — a valid zero-byte hop with ``retrain_after_ps
+    > 0`` (`link_layer.insert_retrain_markers`, the full-duplex partner
+    of a retraining channel) — takes no service and occupies nothing: it
+    contributes a down interval (its arrival + retrain) that delays
+    exactly the channel's items *after it* in the global FCFS key order
+    (arrival, flat index) — the engine's segmented-scan semantics.  It is
+    processed punctually at its arrival (never queued), so its own
+    transaction chain continues undelayed;
   * arrival at hop h+1 = departure at hop h + fixed_after[h].
 """
 
@@ -76,6 +84,7 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
     # channel state
     free_at = {}      # channel -> (time, last_dir, last_row, down_until)
     queues = {}       # channel -> heap of (arrival, flat_idx, pkt, hop)
+    markers = {}      # channel -> list of ((arrival, flat_idx), down_end)
 
     # event heap: (time, seq, kind, payload)  kind 0=arrival at hop, 1=channel free
     ev = []
@@ -101,8 +110,19 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
         heapq.heappop(q)
         gap = int(turn[c]) if (last_dir != -1 and direction[p, hop] != last_dir) else 0
         # a retraining channel grants nothing before down_until (the gap is
-        # NOT re-paid on top of it: mirror of the engine's max(floor, down))
-        st = max(arr, t_free + gap, down_until)
+        # NOT re-paid on top of it: mirror of the engine's max(floor, down));
+        # link-down markers apply only to items after them in FCFS key order.
+        # A grant never starts before ``now`` (st >= now by construction),
+        # so markers whose down interval already ended are dead — prune
+        # them to keep the scan short on retrain-heavy runs.
+        down = down_until
+        ml = markers.get(c)
+        if ml:
+            ml[:] = [m for m in ml if m[1] > now]
+            for key, dend in ml:
+                if key < (arr, p * h + hop):
+                    down = max(down, dend)
+        st = max(arr, t_free + gap, down)
         ser = ser_time(p, hop, c)
         extra = 0
         r = int(row[p, hop])
@@ -119,14 +139,37 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
         heapq.heappush(ev, (int(arrive[p, hop + 1]), seq, 0, (p, hop + 1))); seq += 1
         heapq.heappush(ev, (dp, seq, 1, c)); seq += 1
 
+    # Events are processed in *timestamp batches*: every event at the
+    # current time is drained — arrivals enqueued, link-down markers
+    # registered — before any channel serves.  Within one timestamp the
+    # serve order is then fully determined by the queue key (arrival,
+    # flat index), independent of event delivery order — exactly the
+    # engine's global sort order, which is what makes equality bit-exact
+    # even when many arrivals tie (regular traffic like the coherence
+    # lowering produces dense ties).
     while ev:
-        now, _, kind, payload = heapq.heappop(ev)
-        if kind == 0:
+        now = ev[0][0]
+        batch = []
+        while ev and ev[0][0] == now:
+            batch.append(heapq.heappop(ev))
+        serves = []
+        for _, _, kind, payload in batch:
+            if kind != 0:
+                serves.append(payload)
+                continue
             p, hop = payload
             # skip padded hops and zero-byte packets: the latter ride a side
             # channel (command path) — instant pass-through, no bus occupancy,
-            # no direction turn (mirror of the engine semantics)
+            # no direction turn (mirror of the engine semantics).  A link-down
+            # marker (valid, zero-byte, retrain > 0) is also a pass-through,
+            # but registers its down interval for the channel's later-keyed
+            # items on the way past.
             while hop < h and (not valid[p, hop] or nbytes[p, hop] == 0):
+                if (valid[p, hop] and retrain is not None
+                        and retrain[p, hop] > 0):
+                    a = int(arrive[p, hop])
+                    markers.setdefault(int(chan[p, hop]), []).append(
+                        ((a, p * h + hop), a + int(retrain[p, hop])))
                 start[p, hop] = arrive[p, hop]
                 depart[p, hop] = arrive[p, hop]
                 arrive[p, hop + 1] = arrive[p, hop] + (
@@ -137,12 +180,13 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
                 continue
             c = int(chan[p, hop])
             queues.setdefault(c, [])
-            heapq.heappush(queues[c], (int(arrive[p, hop]), p * h + hop, p, hop))
-            try_serve(c, now)
-        else:
-            if isinstance(payload, tuple):
+            heapq.heappush(queues[c],
+                           (int(arrive[p, hop]), p * h + hop, p, hop))
+            serves.append(c)
+        for c in serves:
+            if isinstance(c, tuple):    # legacy no-op payload
                 continue
-            try_serve(payload, now)
+            try_serve(c, now)
 
     return {
         "arrive": arrive,

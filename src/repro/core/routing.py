@@ -42,7 +42,10 @@ def route_and_simulate(graph: FabricGraph, specs, strategy: str = "oblivious",
     rng = np.random.default_rng(seed)
 
     wl = build_workload(graph, specs, **build_kw)
-    n = wl.hops.channel.shape[0]
+    # real transactions only: build_workload appends pseudo-rows (requester
+    # -1, e.g. credit-return DLLPs) after the demand rows, and their count
+    # is route-dependent — route choices index the demand prefix
+    n = int((wl.requester >= 0).sum())
 
     if strategy == "oblivious":
         sched = simulate(wl.hops, wl.channels, wl.issue_ps)
@@ -51,7 +54,7 @@ def route_and_simulate(graph: FabricGraph, specs, strategy: str = "oblivious",
     # alternative-route universe per transaction
     n_alts = np.array([
         graph.n_route_alternatives(int(s), int(d))
-        for s, d in zip(wl.requester, wl.target)
+        for s, d in zip(wl.requester[:n], wl.target[:n])
     ])
     if strategy == "ecmp":
         choice = rng.integers(0, 1 << 30, n) % n_alts
@@ -64,7 +67,7 @@ def route_and_simulate(graph: FabricGraph, specs, strategy: str = "oblivious",
     # re-assign transactions one at a time against a live per-channel load
     # estimate — the steady state a per-packet adaptive arbiter converges to.
     alt_chans = {}
-    for s, d in set(zip(wl.requester.tolist(), wl.target.tolist())):
+    for s, d in set(zip(wl.requester[:n].tolist(), wl.target[:n].tolist())):
         for a in range(graph.n_route_alternatives(s, d)):
             alt_chans[(s, d, a)] = _route_channels(graph, s, d, a)
 

@@ -24,6 +24,23 @@ processing; any required BISnp adds a BISnp round trip (plus per-extra-line
 cache access cost and bus occupancy for InvBlk flows).  The §V-B bus is
 configured with infinite bandwidth (transfer_ps=0) to isolate SF behaviour,
 exactly as in the paper; the §V-C InvBlk study uses a finite bus.
+
+Fabric coupling (`core.coherence_traffic`): the analytic miss/BISnp
+constants above describe an *isolated* device on an infinite bus.  Two
+hooks close the loop with the fabric engine without touching the default
+path:
+
+  * ``return_events=True`` additionally returns a dense per-request
+    `SFEvents` log — the protocol decisions (hit/miss, BISnp target owner
+    mask, InvBlk run length, writeback lines) plus the time each miss
+    leaves the requester.  Decisions depend only on the request stream
+    order, never on latencies, so the log is a fixed point of the outer
+    coupling loop by construction.
+  * ``fabric_lat_ps`` (per-request int64) replaces the whole analytic
+    miss path (bus + link RTT + controller + BISnp round trips +
+    writebacks) with a measured fabric latency: ``lat_miss = t_cache +
+    fabric_lat_ps[i] + t_sf``.  ``None`` — the default — compiles the
+    exact pre-coupling scan.
 """
 
 from __future__ import annotations
@@ -67,6 +84,25 @@ class CacheConfig:
     t_cache_ps: int = 12_000
 
 
+class SFEvents(NamedTuple):
+    """Dense per-request protocol-decision log (fabric lowering contract).
+
+    Decisions are functions of the request stream order only (the scan
+    processes requests in input order regardless of clocks), so the log is
+    identical whether latencies come from the analytic constants or from a
+    fabric measurement — the invariant `core.coherence_traffic` relies on.
+    """
+
+    fab_issue_ps: jnp.ndarray   # (T,) time the miss leaves the requester
+    cache_hit: jnp.ndarray      # (T,) bool — hits never reach the fabric
+    bisnp_mask: jnp.ndarray     # (T,) int32 bitmask of snooped requesters
+    inv_lines: jnp.ndarray      # (T,) int32 lines invalidated by this request
+    wb_lines: jnp.ndarray       # (T,) int32 dirty lines flushed (writeback)
+    need_victim: jnp.ndarray    # (T,) bool capacity victim selected
+    conflict: jnp.ndarray       # (T,) bool write-conflict BISnp
+    invblk_len: jnp.ndarray     # (T,) int32 InvBlk run length (0 if none)
+
+
 class SFResult(NamedTuple):
     latency_ps: jnp.ndarray       # (T,) per-request latency
     cache_hit: jnp.ndarray        # (T,) bool
@@ -103,15 +139,24 @@ def _victim_scores(policy: str, sf_tag, sf_ins, sf_acc, lfi_count, runlen):
     raise ValueError(f"unknown policy {policy!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("sf_cfg", "cache_cfg", "n_requesters"))
+@functools.partial(jax.jit, static_argnames=("sf_cfg", "cache_cfg",
+                                              "n_requesters", "return_events"))
 def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
                 sf_cfg: SFConfig, cache_cfg: CacheConfig,
-                n_requesters: int = 1) -> SFResult:
+                n_requesters: int = 1,
+                fabric_lat_ps: jnp.ndarray | None = None,
+                return_events: bool = False):
     """Run the DCOH protocol over a merged request stream.
 
     addr      (T,) int32 line addresses in [0, footprint)
     is_write  (T,) bool
     req_id    (T,) int32 in [0, n_requesters)
+
+    ``fabric_lat_ps`` (optional, (T,) int64) replaces the analytic miss
+    path with per-request fabric-measured latencies (`core.
+    coherence_traffic` feedback); ``return_events=True`` returns
+    ``(SFResult, SFEvents)``.  The defaults compile the exact isolated
+    scan, bit for bit.
     """
     T = addr.shape[0]
     R, Cc, Cs = n_requesters, cache_cfg.capacity, sf_cfg.capacity
@@ -158,7 +203,10 @@ def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
     maxlen = max(int(sf_cfg.invblk_max), 1)
 
     def step(s: S, x):
-        a, w, r = x
+        if fabric_lat_ps is None:
+            a, w, r = x
+        else:
+            a, w, r, fab = x
         t = s.clock[r]
         rbit = jnp.int32(1) << r
 
@@ -226,8 +274,13 @@ def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
         bus_occupancy = transfer_ps * (1 + jnp.where(need_victim, v_len, 0))
         lat_bus = (t_bus_ready - (t + lat_hit)) + transfer_ps
 
-        lat_miss = (lat_hit + lat_bus + sf_cfg.miss_path_ps + sf_cfg.t_sf_ps
-                    + lat_bisnp + lat_wb)
+        if fabric_lat_ps is None:
+            lat_miss = (lat_hit + lat_bus + sf_cfg.miss_path_ps
+                        + sf_cfg.t_sf_ps + lat_bisnp + lat_wb)
+        else:
+            # fabric coupling: the measured round trip subsumes the bus,
+            # link RTT, controller, BISnp legs and writebacks
+            lat_miss = lat_hit + fab + jnp.int64(sf_cfg.t_sf_ps)
         latency = jnp.where(chit, lat_hit, lat_miss)
 
         # ---- state updates ----------------------------------------------
@@ -290,21 +343,51 @@ def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
             jnp.sum((sf_owner_bit := (new.sf_owner & 1) > 0) & (new.sf_tag >= 0)),
             jnp.sum(new.cache_tag[0] >= 0),
         )
+        if return_events:
+            # BISnp targets: owners of cleared victim lines, plus the other
+            # requesters on a write conflict (R is static and small)
+            vmask = jnp.int32(0)
+            for rr in range(R):
+                owned = jnp.any(clear_entry & (((s.sf_owner >> rr) & 1) > 0))
+                vmask = vmask | jnp.where(owned, jnp.int32(1 << rr),
+                                          jnp.int32(0))
+            bisnp_mask = (jnp.where(need_victim, vmask, 0)
+                          | jnp.where(conflict, others, 0)).astype(jnp.int32)
+            out = out + (
+                t + lat_hit,
+                bisnp_mask,
+                (jnp.where(need_victim, n_clear, 0)
+                 + conflict.astype(jnp.int64)).astype(jnp.int32),
+                jnp.where(any_dirty, n_dirty, 0).astype(jnp.int32),
+                need_victim, conflict,
+                jnp.where(need_victim, v_len, 0).astype(jnp.int32),
+            )
         return new, out
 
-    final, (lat, chit, owner0, cached0) = jax.lax.scan(
-        step, init, (addr.astype(jnp.int32), is_write, req_id.astype(jnp.int32))
-    )
+    xs = (addr.astype(jnp.int32), is_write, req_id.astype(jnp.int32))
+    if fabric_lat_ps is not None:
+        xs = xs + (jnp.asarray(fabric_lat_ps, jnp.int64),)
+    final, outs = jax.lax.scan(step, init, xs)
+    lat, chit, owner0, cached0 = outs[:4]
     total = jnp.max(final.clock)
     bw = (T * sf_cfg.line_bytes * jnp.int64(1_000_000_000_000)
           // jnp.maximum(total, 1) // 1_000_000)
-    return SFResult(
+    res = SFResult(
         latency_ps=lat, cache_hit=chit,
         bisnp_events=final.bisnp, invalidated_lines=final.inval,
         total_time_ps=total, bandwidth_MBps=bw,
         owner_lines=owner0, cached_lines=cached0,
         final_sf_tag=final.sf_tag, final_sf_owner=final.sf_owner,
         final_cache_tag=final.cache_tag,
+    )
+    if not return_events:
+        return res
+    fab_issue, bisnp_mask, inv_lines, wb_lines, need_victim, conflict, \
+        invblk_len = outs[4:]
+    return res, SFEvents(
+        fab_issue_ps=fab_issue, cache_hit=chit, bisnp_mask=bisnp_mask,
+        inv_lines=inv_lines, wb_lines=wb_lines, need_victim=need_victim,
+        conflict=conflict, invblk_len=invblk_len,
     )
 
 

@@ -140,6 +140,9 @@ class FabricGraph:
         # by devices.build_workload via link_layer.sample_hop_tables; they
         # never enter the engine's channel arrays)
         r_sto, r_p, r_win, r_thr, r_down, r_seed = [], [], [], [], [], []
+        # full-duplex pairing (reverse channel of each direction; -1 for
+        # half-duplex and service channels) + credit-return DLLP config
+        pair, c_dllp, c_win = [], [], []
         # directed edge lookup: (u, v) -> (channel, direction flag)
         self._edge: dict[tuple[int, int], tuple[int, int]] = {}
         self._adj: list[list[int]] = [[] for _ in range(n)]
@@ -154,14 +157,18 @@ class FabricGraph:
             if ls.duplex == FULL:
                 c0 = len(bw)
                 turn += [0, 0]
+                pair += [c0 + 1, c0]
                 self._edge[(a, b)] = (c0, 0)
                 self._edge[(b, a)] = (c0 + 1, 0)
             else:
                 c0 = len(bw)
                 turn += [ls.turnaround_ps]
+                pair += [-1]
                 self._edge[(a, b)] = (c0, 0)
                 self._edge[(b, a)] = (c0, 1)
             bw += [low.eff_bw_MBps] * n_dirs
+            c_dllp += [low.credit_dllp] * n_dirs
+            c_win += [low.credit_window] * n_dirs
             fixed += [ls.fixed_ps + low.extra_fixed_ps] * n_dirs
             is_service += [False] * n_dirs
             f_size += [low.flit_size] * n_dirs
@@ -198,6 +205,9 @@ class FabricGraph:
                 r_thr.append(0)
                 r_down.append(0)
                 r_seed.append(0)
+                pair.append(-1)
+                c_dllp.append(False)
+                c_win.append(0)
 
         self.chan_bw_MBps = np.asarray(bw, dtype=np.int64)
         self.chan_fixed_ps = np.asarray(fixed, dtype=np.int64)
@@ -212,6 +222,9 @@ class FabricGraph:
         self.chan_retrain_threshold = np.asarray(r_thr, dtype=np.int64)
         self.chan_retrain_ps = np.asarray(r_down, dtype=np.int64)
         self.chan_rel_seed = np.asarray(r_seed, dtype=np.int64)
+        self.chan_pair = np.asarray(pair, dtype=np.int64)
+        self.chan_credit_dllp = np.asarray(c_dllp, dtype=bool)
+        self.chan_credit_window = np.asarray(c_win, dtype=np.int64)
         self.n_channels = len(bw)
 
         # ---- all-pairs shortest paths (Floyd–Warshall w/ next-hop) ---------

@@ -18,6 +18,8 @@ read-dominated; silo the most mixed).
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 # name -> (write_ratio, pattern, locality notes)
@@ -42,7 +44,9 @@ def generate(name: str, n: int = 100_000, footprint_lines: int = 1 << 16,
     if name not in WORKLOADS:
         raise KeyError(f"unknown workload {name!r}; have {sorted(WORKLOADS)}")
     write_ratio, pattern = WORKLOADS[name]
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    # stable per-workload stream: zlib.crc32 is process-independent, unlike
+    # hash() under PYTHONHASHSEED randomization — traces must reproduce
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 65536)
 
     if pattern == "random":
         addr = rng.integers(0, footprint_lines, n)
@@ -80,6 +84,26 @@ def generate(name: str, n: int = 100_000, footprint_lines: int = 1 << 16,
         "mix_degree": mix_degree(is_write),
         "synthetic": True,
     }
+
+
+def request_stream(name: str, n: int = 10_000, footprint_lines: int = 4096,
+                   n_requesters: int = 1, seed: int = 0):
+    """Trace-driven request stream for the snoop-filter / coherence-fabric
+    pipeline (paper §V-E trace mode driving the §V-B/§V-C machinery).
+
+    Generates the named workload's synthetic trace, folds addresses into
+    the DCOH footprint, and interleaves requesters round-robin — the same
+    ``(addr, is_write, req_id)`` contract as
+    `snoop_filter.make_skewed_stream`, so any bench accepting a stream
+    source runs real-workload mixes unchanged.  Returns
+    ``(addr, is_write, req_id)`` jnp arrays.
+    """
+    import jax.numpy as jnp
+
+    tr = generate(name, n=n, footprint_lines=footprint_lines, seed=seed)
+    addr = (tr["addr"] % footprint_lines).astype(np.int32)
+    rid = (np.arange(n) % max(n_requesters, 1)).astype(np.int32)
+    return jnp.asarray(addr), jnp.asarray(tr["is_write"]), jnp.asarray(rid)
 
 
 def load_csv(path: str) -> dict:

@@ -1,0 +1,490 @@
+"""Fabric-coupled device coherence: isolated-mode bit-exactness, event-log
+invariants, engine==oracle on device-initiated (reverse-direction) traffic,
+full-duplex retraining mirrors, credit-DLLP coupling, trace streams."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  (x64)
+from repro.core import topology as T
+from repro.core.coherence_traffic import (CoherenceFabricSpec,
+                                          bisnp_latencies, concat_background,
+                                          lower_coherence, simulate_coupled)
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import make_channels, simulate
+from repro.core.ref_des import simulate_ref
+from repro.core.snoop_filter import (CacheConfig, SFConfig,
+                                     make_skewed_stream, simulate_sf)
+
+
+def star_graph(n_req=2, n_extra=0, bw=64_000, fixed=26_000):
+    kinds = ([T.SWITCH] + [T.REQUESTER] * n_req + [T.MEMORY]
+             + [T.REQUESTER] * n_extra)
+    links = [T.LinkSpec(i, 0, bw, fixed) for i in range(1, len(kinds))]
+    graph = T.Topology(np.asarray(kinds, np.int64), links,
+                       name="star").build()
+    spec = CoherenceFabricSpec(dev_node=n_req + 1,
+                               req_nodes=tuple(range(1, n_req + 1)))
+    return graph, spec
+
+
+def chain_graph(n_req=2):
+    """Requesters and device at opposite ends of a 2-switch chain — longer
+    routes, so BISnp legs span multiple links."""
+    kinds = [T.SWITCH, T.SWITCH] + [T.REQUESTER] * n_req + [T.MEMORY]
+    links = [T.LinkSpec(0, 1, 64_000, 26_000)]
+    for i in range(n_req):
+        links.append(T.LinkSpec(2 + i, 0, 64_000, 26_000))
+    links.append(T.LinkSpec(2 + n_req, 1, 64_000, 26_000))
+    graph = T.Topology(np.asarray(kinds, np.int64), links,
+                       name="chain2").build()
+    spec = CoherenceFabricSpec(dev_node=2 + n_req,
+                               req_nodes=tuple(range(2, 2 + n_req)))
+    return graph, spec
+
+
+def _stream(n=400, footprint=256, n_req=2, write_ratio=0.3, seed=4):
+    return make_skewed_stream(n, footprint, write_ratio=write_ratio,
+                              n_requesters=n_req, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# default isolated mode stays bit-exact (cross-PR regression goldens)
+# ---------------------------------------------------------------------------
+
+# captured from the pre-coupling snoop filter (PR 2 tree) — the §V-B/§V-C
+# reproductions must stay bit-for-bit on the default path
+GOLDEN = {
+    ("fifo", 1, 0): (165750000, 1001360, 509, 509, 83114000,
+                     16282, 194, 17081),
+    ("lifo", 1, 0): (134449000, 898936, 432, 432, 67357000,
+                     16075, 199, 17641),
+    ("blp", 2, 12000): (248789155, 1691133, 541, 885, 124569410,
+                        24316, 155, 24844),
+}
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_isolated_default_bitexact_golden(key):
+    policy, invblk, bus = key
+    addr, wr, rid = make_skewed_stream(2000, 512, write_ratio=0.2,
+                                       n_requesters=2, seed=9)
+    cfg = SFConfig(capacity=102, policy=policy, invblk_max=invblk,
+                   footprint_lines=512, bus_MBps=bus)
+    r = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=102),
+                    n_requesters=2)
+    lat = np.asarray(r.latency_ps)
+    got = (int(lat.sum()), int(np.bitwise_xor.reduce(lat.astype(np.int64))),
+           int(r.bisnp_events), int(r.invalidated_lines),
+           int(r.total_time_ps), int(np.asarray(r.final_sf_tag).sum()),
+           int(np.asarray(r.final_sf_owner).sum()),
+           int(np.asarray(r.final_cache_tag).sum()))
+    assert got == GOLDEN[key]
+
+
+def test_event_log_consistent_and_latency_independent():
+    """Events agree with the SFResult counters, and are identical under an
+    arbitrary fabric-latency override — the coupling-loop invariant."""
+    addr, wr, rid = _stream()
+    cfg = SFConfig(capacity=48, policy="fifo", footprint_lines=256)
+    res, ev = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=48),
+                          n_requesters=2, return_events=True)
+    assert int((np.asarray(ev.bisnp_mask) > 0).sum()) == int(res.bisnp_events)
+    assert int(np.asarray(ev.inv_lines).sum()) == int(res.invalidated_lines)
+    assert not (np.asarray(ev.need_victim) & np.asarray(ev.cache_hit)).any()
+    fab = jnp.full(addr.shape, 777_000, jnp.int64)
+    res2, ev2 = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=48),
+                            n_requesters=2, fabric_lat_ps=fab,
+                            return_events=True)
+    for f in ev._fields:
+        if f == "fab_issue_ps":     # clocks move; decisions must not
+            continue
+        assert np.array_equal(np.asarray(getattr(ev, f)),
+                              np.asarray(getattr(ev2, f))), f
+    # the override is actually applied: every miss pays cache + fab + sf
+    miss = ~np.asarray(ev2.cache_hit)
+    want = cfg.t_cache_ps + 777_000 + cfg.t_sf_ps
+    assert (np.asarray(res2.latency_ps)[miss] == want).all()
+
+
+# ---------------------------------------------------------------------------
+# engine == oracle with device-initiated (reverse-direction) hops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_coupled_engine_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(1, 4))
+    graph, spec = (star_graph(n_req) if seed % 2 == 0
+                   else chain_graph(n_req))
+    n = int(rng.integers(60, 200))
+    footprint = int(rng.choice([64, 128, 256]))
+    addr, wr, rid = make_skewed_stream(
+        n, footprint, write_ratio=float(rng.uniform(0.1, 0.6)),
+        n_requesters=n_req, seed=int(rng.integers(0, 999)))
+    cfg = SFConfig(capacity=max(footprint // 8, 4), policy="fifo",
+                   footprint_lines=footprint)
+    _, ev = simulate_sf(addr, wr, rid, cfg,
+                        CacheConfig(capacity=max(footprint // 8, 4)),
+                        n_requesters=n_req, return_events=True)
+    low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev)
+    assert np.asarray(low.hops.valid)[:, low.fwd_cols].any(), \
+        "case has no BISnp traffic; pick different parameters"
+    ch = make_channels(graph)
+    issue = ev.fab_issue_ps
+    sched = simulate(low.hops, ch, issue, max_rounds=400)
+    ref = simulate_ref(low.hops, ch, issue)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    assert np.array_equal(np.asarray(sched.start), ref["start"])
+    assert np.array_equal(np.asarray(sched.depart), ref["depart"])
+
+
+def test_coupled_with_background_engine_matches_oracle():
+    graph, spec = star_graph(2, n_extra=1)
+    addr, wr, rid = _stream(n=200)
+    cfg = SFConfig(capacity=32, policy="lifo", footprint_lines=256)
+    _, ev = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=32),
+                        n_requesters=2, return_events=True)
+    low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev)
+    bg = build_workload(graph, [RequesterSpec(
+        node=4, n_requests=150, targets=[spec.dev_node], read_ratio=0.5,
+        issue_interval_ps=2_000, payload_bytes=512, seed=2)],
+        header_bytes=16, warmup_frac=0.0)
+    hops, issue = concat_background(low, ev.fab_issue_ps, bg)
+    ch = make_channels(graph)
+    sched = simulate(hops, ch, issue, max_rounds=400)
+    ref = simulate_ref(hops, ch, issue)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+
+
+# ---------------------------------------------------------------------------
+# coupling preserves every protocol decision + invariants
+# ---------------------------------------------------------------------------
+
+def test_coupled_decisions_match_isolated():
+    graph, spec = star_graph(2)
+    addr, wr, rid = _stream()
+    cfg = SFConfig(capacity=48, policy="fifo", footprint_lines=256)
+    iso = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=48),
+                      n_requesters=2)
+    out = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=48),
+                           graph, spec, n_requesters=2, max_iters=10)
+    assert out.converged
+    assert int(out.sf.bisnp_events) == int(iso.bisnp_events)
+    assert int(out.sf.invalidated_lines) == int(iso.invalidated_lines)
+    assert np.array_equal(np.asarray(out.sf.final_sf_tag),
+                          np.asarray(iso.final_sf_tag))
+    assert np.array_equal(np.asarray(out.sf.final_sf_owner),
+                          np.asarray(iso.final_sf_owner))
+    assert np.array_equal(np.asarray(out.sf.final_cache_tag),
+                          np.asarray(iso.final_cache_tag))
+    assert np.array_equal(np.asarray(out.sf.cache_hit),
+                          np.asarray(iso.cache_hit))
+    # coupled latencies differ (the analytic constants are not the fabric)
+    assert not np.array_equal(np.asarray(out.sf.latency_ps),
+                              np.asarray(iso.latency_ps))
+
+
+def test_inclusivity_and_owner_consistency_under_coupling():
+    """Every cached line has a live SF entry listing its owner — re-checked
+    on the coupled result's final protocol state."""
+    graph, spec = star_graph(2)
+    addr, wr, rid = _stream(n=600, seed=11)
+    cfg = SFConfig(capacity=48, policy="lru", footprint_lines=256)
+    out = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=48),
+                           graph, spec, n_requesters=2, max_iters=10)
+    sf_tags = np.asarray(out.sf.final_sf_tag)
+    sf_owner = np.asarray(out.sf.final_sf_owner)
+    cache = np.asarray(out.sf.final_cache_tag)
+    live = sf_tags >= 0
+    assert len(np.unique(sf_tags[live])) == live.sum()   # unique tags
+    for r in range(cache.shape[0]):
+        lines = set(int(a) for a in cache[r] if a >= 0)
+        owned = set(int(t) for t, o in zip(sf_tags, sf_owner)
+                    if t >= 0 and (int(o) >> r) & 1)
+        assert not lines - owned, (r, lines - owned)
+
+
+def test_bisnp_latencies_cover_snooped_misses():
+    graph, spec = star_graph(2)
+    addr, wr, rid = _stream()
+    cfg = SFConfig(capacity=48, policy="fifo", footprint_lines=256)
+    out = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=48),
+                           graph, spec, n_requesters=2, max_iters=10)
+    bl = np.asarray(out.bisnp_lat_ps)
+    mask = np.asarray(out.events.bisnp_mask)
+    miss = np.asarray(out.lowering.miss)
+    n_slots = sum(int(((mask[miss] >> b) & 1).sum())
+                  for b in range(len(spec.req_nodes)))
+    assert int((bl > 0).sum()) == n_slots
+    # measured round trips exceed the pure-wire floor (2 hops each way)
+    assert bl[bl > 0].min() > 4 * 26_000
+
+
+def test_lowering_column_map_survives_retrain_markers():
+    """On a graph sampling retraining stalls, marker insertion shifts hop
+    columns per row; the logical->physical col_map must keep the service
+    hop and the BISnp round-trip reads exact (regression: the map used to
+    be the identity, silently reading demand hops as snoop legs)."""
+    from repro.core.link_layer import FlitConfig
+
+    flit = FlitConfig("flit256", ber=2e-4, reliability="stochastic",
+                      rel_seed=5, retrain_threshold=2, retrain_ps=500_000)
+    kinds = [T.SWITCH, T.REQUESTER, T.REQUESTER, T.MEMORY]
+    links = [T.LinkSpec(i, 0, 128_000, 26_000, flit=flit)
+             for i in range(1, 4)]
+    graph = T.Topology(np.asarray(kinds, np.int64), links,
+                       name="star-sto").build()
+    spec = CoherenceFabricSpec(dev_node=3, req_nodes=(1, 2))
+    addr, wr, rid = _stream(n=300, seed=6)
+    cfg = SFConfig(capacity=32, policy="fifo", footprint_lines=256)
+    _, ev = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=32),
+                        n_requesters=2, return_events=True)
+    low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev)
+    assert np.asarray(low.hops.retrain_after_ps).any()
+    assert low.n_cols > low.col_map.shape[1]     # markers actually shifted
+    # the mapped service column holds the service hop on every miss row
+    nb = np.asarray(low.hops.nbytes)
+    svc_phys = low.col_map[np.arange(nb.shape[0]), low.svc_col]
+    assert (nb[np.arange(nb.shape[0]), svc_phys][low.miss]
+            == cfg.line_bytes).all()
+    sched = simulate(low.hops, make_channels(graph), ev.fab_issue_ps,
+                     max_rounds=400)
+    ref = simulate_ref(low.hops, make_channels(graph), ev.fab_issue_ps)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    bl = np.asarray(bisnp_latencies(sched, low))
+    mask = np.asarray(ev.bisnp_mask)
+    n_slots = sum(int(((mask[low.miss] >> b) & 1).sum()) for b in range(2))
+    assert int((bl > 0).sum()) == n_slots
+
+
+def test_divergence_grows_with_fabric_load():
+    from benchmarks.bench_coherence_fabric import (divergence_gate,
+                                                   run_divergence_sweep)
+
+    sweep = run_divergence_sweep(n=300, footprint=256,
+                                 loads=(0.0, 0.5, 0.9),
+                                 policies=("fifo",))
+    gate = divergence_gate(sweep)
+    assert gate["nonzero"] and gate["grows_with_load"], gate
+
+
+# ---------------------------------------------------------------------------
+# satellite: full-duplex retraining takes both directions down
+# ---------------------------------------------------------------------------
+
+def _marker_case(seed, c=4):
+    """Random hop tables + link-down markers on full-duplex-like channels
+    (turnaround 0, not row-managed) — the insertion contract."""
+    from repro.core.engine import Channels, Hops
+
+    rng = np.random.default_rng(seed)
+    n, h = int(rng.integers(4, 30)), int(rng.integers(2, 6))
+    bw = rng.integers(10, 100, c).astype(np.int64) * 1000
+    ch = Channels(jnp.asarray(bw), jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)))
+    chan = rng.integers(0, c, (n, h)).astype(np.int32)
+    nbytes = rng.integers(1, 500, (n, h)).astype(np.int64)
+    valid = rng.random((n, h)) < .85
+    retrain = np.zeros((n, h), np.int64)
+    # some hops become markers: zero bytes + a down interval
+    mk = (rng.random((n, h)) < 0.25) & valid
+    nbytes[mk] = 0
+    retrain[mk] = rng.integers(1, 5, mk.sum()) * 50_000
+    # some real hops also retrain their own channel
+    own = (rng.random((n, h)) < 0.15) & valid & ~mk
+    retrain[own] = rng.integers(1, 5, own.sum()) * 50_000
+    hops = Hops(jnp.asarray(chan), jnp.asarray(nbytes),
+                jnp.asarray(rng.integers(0, 1, (n, h)).astype(np.int8)),
+                jnp.asarray(np.full((n, h), -1, np.int32)),
+                jnp.asarray(rng.integers(0, 2000, (n, h)).astype(np.int64)),
+                jnp.asarray(valid), jnp.asarray(valid),
+                extra_wire_bytes=jnp.asarray(np.zeros((n, h), np.int64)),
+                retrain_after_ps=jnp.asarray(retrain))
+    issue = np.sort(rng.integers(0, 3000, n)).astype(np.int64)
+    return hops, ch, issue
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_link_down_markers_engine_matches_oracle(seed):
+    hops, ch, issue = _marker_case(seed)
+    sched = simulate(hops, ch, jnp.asarray(issue), max_rounds=300)
+    ref = simulate_ref(hops, ch, issue)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    assert np.array_equal(np.asarray(sched.start), ref["start"])
+    assert np.array_equal(np.asarray(sched.depart), ref["depart"])
+
+
+def test_retraining_downs_both_directions_of_full_duplex():
+    """A retraining stall on the forward channel must also stall the paired
+    reverse channel: reverse-direction traffic timed to land inside the
+    stall is delayed to its end."""
+    from repro.core.link_layer import FlitConfig, retrain_marker_mask
+
+    cfg = FlitConfig("flit256", ber=3e-4, reliability="stochastic",
+                     rel_seed=7, retrain_threshold=2, retrain_ps=1_000_000)
+    topo = T.with_flit(T.single_bus(n_mems=4, bw_MBps=128_000), cfg)
+    graph = topo.build()
+    wl = build_workload(graph, [RequesterSpec(
+        node=0, n_requests=250, targets=[2, 3, 4, 5], read_ratio=0.5,
+        issue_interval_ps=300, payload_bytes=944, seed=3)], warmup_frac=0.0)
+    mk = retrain_marker_mask(np.asarray(wl.hops.channel),
+                             np.asarray(wl.hops.nbytes),
+                             np.asarray(wl.hops.valid),
+                             np.asarray(wl.hops.retrain_after_ps))
+    assert mk.any(), "no retraining events sampled; raise BER"
+    # markers landed on the pair of each triggering hop's channel
+    pair = graph.chan_pair
+    chn = np.asarray(wl.hops.channel)
+    rt = np.asarray(wl.hops.retrain_after_ps)
+    trig = (rt > 0) & ~mk & np.asarray(wl.hops.valid)
+    assert set(chn[mk]) <= set(int(pair[c]) for c in chn[trig])
+    # and the mirrored stall delays the schedule vs markers stripped out
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    no_mark = wl.hops._replace(
+        retrain_after_ps=jnp.asarray(np.where(mk, 0, rt)))
+    sched0 = simulate(no_mark, wl.channels, wl.issue_ps, max_rounds=200)
+    assert bool(sched.converged) and bool(sched0.converged)
+    # mirrored stalls delay the run in aggregate (per-row monotonicity is
+    # not guaranteed: a delayed transaction can yield a channel to another)
+    assert int(jnp.max(sched.complete)) > int(jnp.max(sched0.complete))
+    assert int(jnp.sum(sched.complete)) > int(jnp.sum(sched0.complete))
+
+
+def test_retrain_draw_coupled_to_replay_total():
+    """Retrain events are conditioned on the sampled Go-Back-N failures:
+    never more events than total failures allow, zero events on clean hops,
+    positive correlation across hops, marginal rate preserved."""
+    from repro.core.link_layer import channel_rng, sample_replays
+
+    p, W, R = 0.25, 4, 2
+    n_flits = np.full(40_000, 6, np.int64)
+    extra, events = sample_replays(n_flits, p, W, R, channel_rng(0, 0))
+    fails = extra // W
+    assert (events <= fails // R).all()          # hard consistency bound
+    assert not events[fails < R].any()           # no failure-free retrains
+    assert np.corrcoef(fails, events)[0, 1] > 0.2
+    assert events.sum() == pytest.approx(n_flits.sum() * p ** R, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# satellite: credit-return DLLP traffic
+# ---------------------------------------------------------------------------
+
+def test_credit_dllp_off_is_bit_exact_layout():
+    from repro.core.link_layer import FlitConfig
+
+    spec = RequesterSpec(node=0, n_requests=120, targets=[2, 3],
+                         read_ratio=1.0, issue_interval_ps=400,
+                         payload_bytes=944, seed=3)
+    g0 = T.with_flit(T.single_bus(n_mems=2, bw_MBps=128_000),
+                     FlitConfig("flit256")).build()
+    g1 = T.with_flit(T.single_bus(n_mems=2, bw_MBps=128_000),
+                     FlitConfig("flit256", credit_dllp=False)).build()
+    wl0 = build_workload(g0, [spec], warmup_frac=0.0)
+    wl1 = build_workload(g1, [spec], warmup_frac=0.0)
+    assert wl0.hops.channel.shape == wl1.hops.channel.shape
+    assert np.array_equal(np.asarray(wl0.hops.channel),
+                          np.asarray(wl1.hops.channel))
+
+
+def test_credit_dllp_emits_reverse_hops_and_stays_oracle_exact():
+    from repro.core.engine import channel_stats
+    from repro.core.link_layer import FlitConfig
+
+    spec = RequesterSpec(node=0, n_requests=120, targets=[2, 3],
+                         read_ratio=1.0, issue_interval_ps=400,
+                         payload_bytes=944, seed=3)
+    cfg = FlitConfig("flit256", credit_dllp=True, rx_credits=16)
+    topo = T.with_flit(T.single_bus(n_mems=2, bw_MBps=128_000), cfg)
+    graph = topo.build()
+    assert graph.chan_credit_dllp[~graph.chan_is_service].all()
+    assert (graph.chan_credit_window[~graph.chan_is_service] == 16).all()
+    wl = build_workload(graph, [spec], warmup_frac=0.0)
+    n_dllp = int((wl.requester < 0).sum())
+    assert n_dllp > 0
+    assert not np.asarray(wl.measured)[wl.requester < 0].any()
+    # DLLP rows are single reverse-channel hops with DLLP payload size
+    from repro.core.calibration import CREDIT_DLLP_B
+    d = np.asarray(wl.hops.nbytes)[wl.requester < 0]
+    assert (d[:, 0] == CREDIT_DLLP_B).all() and not d[:, 1:].any()
+    # schedule stays engine == oracle
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    # reverse channels actually carry the DLLPs: busy time grows vs off
+    g0 = T.with_flit(T.single_bus(n_mems=2, bw_MBps=128_000),
+                     FlitConfig("flit256")).build()
+    wl0 = build_workload(g0, [spec], warmup_frac=0.0)
+    s0 = simulate(wl0.hops, wl0.channels, wl0.issue_ps, max_rounds=200)
+    busy = np.asarray(channel_stats(wl.hops, sched, wl.channels)["busy_ps"])
+    busy0 = np.asarray(channel_stats(wl0.hops, s0, wl0.channels)["busy_ps"])
+    rev = np.asarray(np.unique(np.asarray(wl.hops.channel)[wl.requester < 0, 0]))
+    assert (busy[rev] > busy0[rev]).all()
+
+
+def test_credit_dllp_with_adaptive_routing():
+    """Route strategies must treat appended DLLP pseudo-rows (requester -1)
+    as non-routable: their count is route-dependent, which used to crash
+    the adaptive rebuild loop with an IndexError."""
+    from repro.core.link_layer import FlitConfig
+    from repro.core.routing import route_and_simulate
+
+    topo = T.with_flit(T.spine_leaf(2),
+                       FlitConfig("flit256", credit_dllp=True,
+                                  rx_credits=16))
+    graph = topo.build()
+    specs = [RequesterSpec(node=r, n_requests=40,
+                           targets=list(graph.topo.memories()),
+                           issue_interval_ps=500, payload_bytes=944, seed=i)
+             for i, r in enumerate(graph.topo.requesters())]
+    for strategy in ("ecmp", "adaptive"):
+        wl, sched, stats = route_and_simulate(graph, specs,
+                                              strategy=strategy,
+                                              warmup_frac=0.0)
+        assert (wl.requester < 0).any()          # DLLP rows present
+        assert float(stats["utility"].max()) <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# satellite: trace-driven request streams
+# ---------------------------------------------------------------------------
+
+def test_trace_request_stream_contract():
+    from repro.core import traces
+
+    addr, wr, rid = traces.request_stream("silo", n=2000,
+                                          footprint_lines=512,
+                                          n_requesters=3, seed=1)
+    assert addr.shape == wr.shape == rid.shape == (2000,)
+    assert int(addr.max()) < 512 and int(addr.min()) >= 0
+    assert set(np.unique(np.asarray(rid))) == {0, 1, 2}
+    w = float(np.asarray(wr).mean())
+    assert 0.2 < w < 0.7                       # silo is the most mixed
+    # drives the snoop filter pipeline unchanged
+    cfg = SFConfig(capacity=64, policy="fifo", footprint_lines=512)
+    res = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=64),
+                      n_requesters=3)
+    assert int(res.bisnp_events) > 0
+
+
+def test_trace_stream_through_coupled_pipeline():
+    from repro.core import traces
+
+    graph, spec = star_graph(2)
+    addr, wr, rid = traces.request_stream("xsbench", n=250,
+                                          footprint_lines=256,
+                                          n_requesters=2, seed=1)
+    cfg = SFConfig(capacity=32, policy="fifo", footprint_lines=256)
+    out = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=32),
+                           graph, spec, n_requesters=2, max_iters=16)
+    assert out.converged
+    assert int(out.fabric_lat_ps.max()) > 0

@@ -111,8 +111,11 @@ def test_extreme_ber_clamped_not_crashing():
 
 def test_bench_direct_sampling_matches_build_path():
     """run_tail_sweep samples tables off the shared hop layout instead of
-    rebuilding per BER; the streams must equal a real per-BER build."""
-    from repro.core.link_layer import (broadcast_reliability_tables,
+    rebuilding per BER; the streams must equal a real per-BER build (after
+    composing the full-duplex retraining-mirror marker insertion the build
+    path applies on top of the sampled tables)."""
+    from repro.core.link_layer import (apply_retrain_markers,
+                                       broadcast_reliability_tables,
                                        sample_hop_tables)
 
     cfg = _stochastic(3e-4)
@@ -124,9 +127,17 @@ def test_bench_direct_sampling_matches_build_path():
         **broadcast_reliability_tables(
             cfg, int(wl.channels.bw_MBps.shape[0]),
             np.asarray(wl.channels.flit_size) > 0))
-    assert np.array_equal(extra, np.asarray(wl_built.hops.extra_wire_bytes))
-    assert np.array_equal(retrain,
-                          np.asarray(wl_built.hops.retrain_after_ps))
+    graph = T.with_flit(T.single_bus(n_mems=4, bw_MBps=BUS_BW), cfg).build()
+    want = apply_retrain_markers(
+        wl.hops._replace(extra_wire_bytes=jnp.asarray(extra),
+                         retrain_after_ps=jnp.asarray(retrain)),
+        graph.chan_pair)
+    assert retrain.any()          # events fired -> markers actually inserted
+    assert want.channel.shape[1] > np.asarray(wl.hops.channel).shape[1]
+    for field in ("channel", "nbytes", "fixed_after_ps", "valid",
+                  "extra_wire_bytes", "retrain_after_ps"):
+        assert np.array_equal(np.asarray(getattr(wl_built.hops, field)),
+                              np.asarray(getattr(want, field))), field
 
 
 def test_sample_replays_zero_cases():
@@ -291,11 +302,15 @@ def test_multivcs_threads_stochastic_reliability():
 def test_retraining_stalls_delay_schedule():
     """Same seeded fault history; enabling retraining must strictly delay
     completion once any event fires (threshold 0 draws identical replay
-    totals, so the runs differ only by link-down intervals)."""
+    totals, so the runs differ only by link-down intervals — after peeling
+    the full-duplex mirror markers off the retraining layout)."""
+    from repro.core.link_layer import strip_retrain_markers
+
     wl_off = _wl(_stochastic(3e-4, retrain_threshold=0), n=200)
     wl_on = _wl(_stochastic(3e-4), n=200)
-    assert np.array_equal(np.asarray(wl_off.hops.extra_wire_bytes),
-                          np.asarray(wl_on.hops.extra_wire_bytes))
+    assert np.array_equal(
+        np.asarray(wl_off.hops.extra_wire_bytes),
+        np.asarray(strip_retrain_markers(wl_on.hops).extra_wire_bytes))
     assert not np.asarray(wl_off.hops.retrain_after_ps).any()
     assert np.asarray(wl_on.hops.retrain_after_ps).any()
     s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps,
