@@ -20,6 +20,14 @@ one stacked fabric simulate per fixpoint iteration):
     ``bisnp_rtt_ps`` constant, the quantity the isolated model fixes by
     assumption.
 
+  * **serialized-vs-concurrent fan-out** — mean snooped-miss latency under
+    the ``fanout="chain"`` (PR-4 serialized snoop collection) and
+    ``fanout="concurrent"`` (fork/join, CXL 3.x BI flow) lowerings of the
+    *same* event log, as the snooped owner count ramps.  The chain model
+    sums k BISnp round trips where the concurrent model waits for the
+    slowest of k, so the acceptance gate: the chain-minus-concurrent
+    divergence grows monotonically with owner count.
+
   * **trace mode** (§V-E) — the same coupled pipeline driven by
     `traces.request_stream` workloads (xsbench/silo) instead of the
     synthetic skewed footprint.
@@ -34,11 +42,13 @@ import numpy as np
 from repro.core import topology as T
 from repro.core import traces
 from repro.core.coherence_traffic import (CoherenceFabricSpec, bisnp_latencies,
-                                          concat_background, lower_coherence)
+                                          coherence_issue, concat_background,
+                                          lower_coherence, pad_rows)
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import make_channels, simulate
-from repro.core.snoop_filter import (CacheConfig, SFConfig, make_skewed_stream,
-                                     simulate_sf)
+from repro.core.snoop_filter import (CacheConfig, SFConfig,
+                                     make_sequential_stream,
+                                     make_skewed_stream, simulate_sf)
 
 from .common import Row, Timer
 
@@ -101,15 +111,16 @@ def _sf_cfg(policy: str, capacity: int, footprint: int) -> SFConfig:
 def coupled_policy_sweep(stream, capacity: int, footprint: int,
                          n_requesters: int, bg_load: float,
                          policies=POLICIES, max_iters: int = 6,
-                         tol_ps: int = 0) -> dict:
+                         tol_ps: int = 0, fanout: str = "concurrent") -> dict:
     """Run the coupled fixpoint for every victim policy, with the fabric
     pass vmapped over the stacked per-policy hop tables.
 
-    The hop layouts are per-policy (different event logs) but share one
-    shape, so the expensive stage — the FCFS fixpoint over the fabric —
-    runs as a single ``jax.vmap`` jit per outer iteration; only the cheap
-    per-policy SF scans stay sequential.  Returns per-policy coupled and
-    isolated metrics.
+    The hop layouts are per-policy (different event logs, and under
+    ``fanout="concurrent"`` different fork/BISnp row counts), so they are
+    row-padded to one shape and the expensive stage — the FCFS fixpoint
+    over the fabric — runs as a single ``jax.vmap`` jit per outer
+    iteration; only the cheap per-policy SF scans stay sequential.
+    Returns per-policy coupled and isolated metrics.
     """
     addr, wr, rid = stream
     graph, spec, bg_nodes = build_coherence_fabric(n_requesters)
@@ -125,22 +136,30 @@ def coupled_policy_sweep(stream, capacity: int, footprint: int,
                               n_requesters=n_requesters, return_events=True)
         isolated[p] = res
         evs[p] = ev
-        lows[p] = lower_coherence(graph, spec, cfgs[p], addr, wr, rid, ev)
+        lows[p] = lower_coherence(graph, spec, cfgs[p], addr, wr, rid, ev,
+                                  fanout=fanout)
     span = max(int(isolated[p].total_time_ps) for p in policies)
     background = _background(graph, bg_nodes, spec.dev_node, bg_load, span)
 
     # hop tables are fixpoint invariants: pad/concat/stack them once; each
-    # iteration only rebuilds the issue vectors
+    # iteration only rebuilds the issue vectors.  Row padding (appended
+    # *after* the background rows) equalizes the per-policy fork/BISnp row
+    # counts without disturbing the [:T] primary prefix or join group ids.
+    per_policy = [concat_background(
+        lows[p], coherence_issue(lows[p], evs[p].fab_issue_ps), background)[0]
+        for p in policies]
+    n_rows = max(h.channel.shape[0] for h in per_policy)
     stacked = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs),
-        *[concat_background(lows[p], evs[p].fab_issue_ps, background)[0]
-          for p in policies])
+        lambda *xs: jnp.stack(xs), *[pad_rows(h, n_rows) for h in per_policy])
     bg_issue = (None if background is None
                 else jnp.asarray(background.issue_ps))
 
-    def issue_vec(ev):
-        return (ev.fab_issue_ps if bg_issue is None
-                else jnp.concatenate([ev.fab_issue_ps, bg_issue]))
+    def issue_vec(p, ev):
+        coh = coherence_issue(lows[p], ev.fab_issue_ps)
+        full = (coh if bg_issue is None
+                else jnp.concatenate([coh, bg_issue]))
+        return jnp.concatenate(
+            [full, jnp.zeros(n_rows - full.shape[0], jnp.int64)])
 
     @jax.jit
     def fabric_pass(hops, issues):
@@ -161,7 +180,7 @@ def coupled_policy_sweep(stream, capacity: int, footprint: int,
                     addr, wr, rid, cfgs[p], cache,
                     n_requesters=n_requesters, fabric_lat_ps=fab[p],
                     return_events=True)
-            issues.append(issue_vec(evs[p]))
+            issues.append(issue_vec(p, evs[p]))
         sched = fabric_pass(stacked, jnp.stack(issues))
         assert bool(sched.converged.all()), "fabric fixpoint did not converge"
         done = True
@@ -183,7 +202,7 @@ def coupled_policy_sweep(stream, capacity: int, footprint: int,
             sf[p], evs[p] = simulate_sf(
                 addr, wr, rid, cfgs[p], cache, n_requesters=n_requesters,
                 fabric_lat_ps=fab[p], return_events=True)
-            issues.append(issue_vec(evs[p]))
+            issues.append(issue_vec(p, evs[p]))
         sched = fabric_pass(stacked, jnp.stack(issues))
         assert bool(sched.converged.all())
 
@@ -237,6 +256,66 @@ def divergence_gate(sweep: list[dict], policy: str = "fifo") -> dict:
             "nonzero": div[-1] > 0}
 
 
+def run_fanout_sweep(owner_counts=(1, 2, 3, 4), n: int = 600,
+                     footprint: int = 256) -> list[dict]:
+    """Serialized-vs-concurrent snoop fan-out divergence vs owner count.
+
+    A sequential stream interleaved over R requesters makes every SF entry
+    R-way shared (each requester's first touch reaches the device and adds
+    its owner bit), so capacity victims fire R-owner BISnp groups.  Both
+    lowerings of the *same* event log run on the same fabric; the chain
+    model pays the k snoop round trips in sequence, the fork/join model
+    pays the slowest — so mean snooped-miss latency diverges more the more
+    owners a snoop targets.
+    """
+    out = []
+    for r_cnt in owner_counts:
+        graph, spec, _ = build_coherence_fabric(r_cnt)
+        ep = graph.topo.endpoint
+        channels = make_channels(graph, ep.row_hit_extra_ps,
+                                 ep.row_miss_extra_ps)
+        addr, wr, rid = make_sequential_stream(n, footprint,
+                                               n_requesters=r_cnt)
+        cap = max(int(0.1 * footprint), 8)
+        cfg = SFConfig(capacity=cap, policy="fifo",
+                       footprint_lines=footprint)
+        _, ev = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=cap),
+                            n_requesters=r_cnt, return_events=True)
+        lat = {}
+        owners = np.zeros(1)
+        for fanout in ("chain", "concurrent"):
+            low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev,
+                                  fanout=fanout, upgrade_bisnp=False)
+            issue = coherence_issue(low, ev.fab_issue_ps)
+            sched = simulate(low.hops, channels, issue,
+                             max_rounds=MAX_ROUNDS)
+            assert bool(sched.converged), f"fanout={fanout} did not converge"
+            t_req = low.miss.shape[0]
+            snooped = low.miss & (np.asarray(ev.bisnp_mask) > 0)
+            lat[fanout] = float(np.mean(
+                np.asarray(sched.complete[:t_req])[snooped]
+                - np.asarray(ev.fab_issue_ps)[snooped]))
+            owners = np.array([bin(int(m)).count("1") for m in
+                               np.asarray(ev.bisnp_mask)[snooped]])
+        out.append({
+            "owners": r_cnt,
+            "mean_snooped": float(owners.mean()) if owners.size else 0.0,
+            "chain_ns": lat["chain"] / 1e3,
+            "conc_ns": lat["concurrent"] / 1e3,
+            "div_ns": (lat["chain"] - lat["concurrent"]) / 1e3,
+        })
+    return out
+
+
+def fanout_gate(sweep: list[dict]) -> dict:
+    """Chain-minus-concurrent divergence must grow monotonically with the
+    snooped owner count and be positive once snoops actually fan out."""
+    div = [r["div_ns"] for r in sweep]
+    grows = all(b > a for a, b in zip(div, div[1:]))
+    return {"divergence_ns": div, "grows_with_owners": grows,
+            "nonzero": div[-1] > 0}
+
+
 def run_trace_mode(names=("xsbench", "silo"), n: int = 800,
                    footprint: int = 1024, load: float = 0.6) -> dict:
     """§V-E trace workloads through the coupled pipeline (fifo + lifo)."""
@@ -280,6 +359,27 @@ def run(quick: bool = False) -> list[Row]:
     ))
     assert gate["grows_with_load"] and gate["nonzero"], \
         "isolated-vs-coupled divergence gate failed"
+
+    with Timer() as t:
+        fsweep = run_fanout_sweep(owner_counts=(1, 2, 3) if quick
+                                  else (1, 2, 3, 4),
+                                  n=300 if quick else 600,
+                                  footprint=footprint // 2)
+    for r in fsweep:
+        rows.append(Row(
+            f"coherence_fabric/fanout_owners{r['owners']}", t.us,
+            f"chain={r['chain_ns']:.0f}ns;conc={r['conc_ns']:.0f}ns;"
+            f"div={r['div_ns']:.0f}ns;snooped={r['mean_snooped']:.2f}",
+        ))
+    fgate = fanout_gate(fsweep)
+    rows.append(Row(
+        "coherence_fabric/fanout_gate", t.us,
+        f"div_ns={','.join(f'{d:.0f}' for d in fgate['divergence_ns'])};"
+        f"grows={fgate['grows_with_owners']};nonzero={fgate['nonzero']};"
+        f"gate={fgate['grows_with_owners'] and fgate['nonzero']}",
+    ))
+    assert fgate["grows_with_owners"] and fgate["nonzero"], \
+        "serialized-vs-concurrent fan-out divergence gate failed"
 
     with Timer() as t:
         tr = run_trace_mode(n=300 if quick else 800,

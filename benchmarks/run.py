@@ -1,16 +1,25 @@
 """Benchmark driver: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]``
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]
+[--json BENCH_smoke.json]``
 
 Prints ``name,us_per_call,derived`` CSV.  ``derived`` carries the reproduced
 quantity and the paper target it validates against (see DESIGN.md §7 for the
 experiment index).  Framework-level benches (fabric collective model, kernels,
 autotune) live alongside the paper-figure benches.
+
+``--json`` additionally writes the rows as a machine-readable snapshot —
+CI uploads these as ``BENCH_*.json`` workflow artifacts on every run, so the
+repo accumulates a perf trajectory without committing result files.  Any
+bench whose embedded acceptance gate fails (AssertionError in its ``run()``)
+exits nonzero, failing the CI job.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -37,6 +46,9 @@ def main() -> None:
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", type=str, default="",
                     help="comma-separated bench names")
+    ap.add_argument("--json", type=str, default="",
+                    help="also write results to this JSON file "
+                         "(CI perf-trajectory artifact)")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
@@ -44,6 +56,8 @@ def main() -> None:
 
     t0 = time.time()
     failed: list[str] = []
+    errors: dict[str, str] = {}
+    results: list[dict] = []
     unknown = only - {name for name, _ in MODULES}
     if unknown:
         # a typo in --only must not silently skip an acceptance gate
@@ -58,17 +72,39 @@ def main() -> None:
         except ImportError as e:  # pragma: no cover
             print(f"{name}/import_error,0.0,{e}")
             failed.append(name)
+            errors[name] = f"ImportError:{e}"
             continue
         try:
             rows = mod.run(quick=args.quick)
         except Exception as e:
             print(f"{name}/run_error,0.0,{type(e).__name__}:{e}")
             failed.append(name)
+            errors[name] = f"{type(e).__name__}:{e}"
             continue
         for r in rows:
             print(r.csv())
             sys.stdout.flush()
-    print(f"total_wall_s,{time.time() - t0:.1f},")
+            results.append({"name": r.name, "us_per_call": r.us_per_call,
+                            "derived": r.derived})
+    wall_s = time.time() - t0
+    print(f"total_wall_s,{wall_s:.1f},")
+    if args.json:
+        import jax
+
+        snapshot = {
+            "quick": args.quick,
+            "only": sorted(only),
+            "wall_s": round(wall_s, 1),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "rows": results,
+            "failed": sorted(failed),
+            "errors": errors,
+        }
+        with open(args.json, "w") as f:
+            json.dump(snapshot, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json} ({len(results)} rows)", file=sys.stderr)
     if failed:
         # embedded acceptance gates (AssertionErrors in bench run()) must
         # fail the CI smoke step, not just print a run_error row

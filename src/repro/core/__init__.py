@@ -34,7 +34,8 @@ from .snoop_filter import (  # noqa: E402,F401
 )
 from . import coherence_traffic  # noqa: E402,F401
 from .coherence_traffic import (  # noqa: E402,F401
-    CoherenceFabricSpec, CoupledResult, lower_coherence, simulate_coupled,
+    CoherenceFabricSpec, CoupledResult, FANOUT_MODES, bisnp_latencies,
+    coherence_issue, lower_coherence, pad_rows, simulate_coupled,
 )
 from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
 from . import fabric_model, autotune, vcs  # noqa: E402,F401

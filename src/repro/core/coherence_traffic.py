@@ -11,17 +11,32 @@ engine:
 
   * **Event lowering** — the scan's dense per-request `SFEvents` log
     (hit/miss, BISnp target owners, InvBlk run length, writeback lines)
-    lowers onto a `FabricGraph` as one hop chain per request: demand
-    request hops requester→device, then per snooped owner a BISnp leg
-    device→owner (reverse-direction traffic — it shares channels with
-    demand *responses*, exercising the full-duplex asymmetry of §V-D)
-    and a BIRsp leg owner→device (carrying writeback bytes), then the
-    endpoint service hop and the response hops back.  Cache hits lower to
-    empty rows; everything is co-scheduled with any background demand
-    workload by ``engine.simulate`` and mirrored exactly by the
-    `ref_des` oracle (device-initiated hops are ordinary hop records — the
-    oracle needs no special case, which is the point of the hop-table
-    contract).
+    lowers onto a `FabricGraph` as hop rows per request.  Two fan-out
+    models:
+
+    ``fanout="concurrent"`` (default) — the CXL 3.x BI flow: a miss with
+    k owners forks k BISnp rows (device→owner, sharing response channels)
+    that issue together once the demand request reaches the device, and
+    the demand leg (endpoint service + response) joins on the *slowest*
+    BIRsp — the engine's fork/join primitive (`engine.Hops.join_id` /
+    ``join_wait``: max-of-arrivals, not summed chains).  Write conflicts
+    on local-cache *hits* additionally lower as **upgrade-BISnp** fork
+    groups — BISnp round trips with no demand leg, issued at the hit's
+    issue clock (`SFEvents.fab_issue_ps`, recorded per request by the SF
+    scan): reverse traffic the hit's own latency never sees (the seed's
+    "hits never leave the requester" timing model is preserved — upgrade
+    traffic congests *other* transactions only).
+
+    ``fanout="chain"`` — the PR-4 serialized model, bit-for-bit: one hop
+    chain per request, owners snooped one after another
+    (device→owner1→device→owner2…), upgrade-BISnps dropped.
+
+    Either way BISnp legs are reverse-direction traffic — they share
+    channels with demand *responses*, exercising the full-duplex asymmetry
+    of §V-D — and everything is co-scheduled with any background demand
+    workload by ``engine.simulate`` and mirrored exactly by the `ref_des`
+    oracle (fork/join rows are ordinary hop records plus the per-row join
+    tables — the oracle's release bookkeeping is the only special case).
 
   * **Outer fixpoint** — SF service time depends on fabric round trips,
     which depend on congestion, which depends on when the SF issues.  The
@@ -31,7 +46,17 @@ engine:
     times, iterate to convergence.  Protocol *decisions* are functions
     of stream order only (never of latencies), so the event log — and
     therefore the hop layout — is a fixpoint invariant; only issue times
-    and measured latencies iterate.
+    and measured latencies iterate.  Over half-duplex links or under
+    heavy background load the undamped Picard iteration can oscillate for
+    tens of iterations (re-timed issues collide with different packets
+    and flip bus turnarounds — the latency map is a step function, and
+    the iterate bounces between its plateaus far past any practical
+    ``max_iters``); ``damping=True`` switches to the ROADMAP's averaged
+    update ``fab <- (fab + measured) // 2``, which collapses
+    hundreds-of-ns oscillation amplitudes geometrically and converges
+    within ``tol_ps`` — measured, within ~1 ps of the exact fixpoint —
+    in a budget the undamped loop blows through.  The default stays
+    undamped: exact PR-4 trajectories, bit-for-bit.
 
 The isolated analytic mode stays the default everywhere: nothing here is
 on any path unless `simulate_coupled` is called, and the §V-B/§V-C
@@ -51,6 +76,8 @@ from .devices import Workload, finish_hops, marker_column_map, packetize
 from .engine import Hops, Schedule, make_channels, simulate_auto
 from .snoop_filter import CacheConfig, SFConfig, SFEvents, SFResult, simulate_sf
 from .topology import SWITCH, FabricGraph
+
+FANOUT_MODES = ("concurrent", "chain")
 
 
 @dataclass(frozen=True)
@@ -77,20 +104,40 @@ class CoherenceFabricSpec:
 
 
 class CoherenceLowering(NamedTuple):
-    """Dense hop tables for one event log + the column map to read the
-    schedule back.  The ``*_cols`` fields index the *logical* (pre-marker)
-    layout; ``col_map[j, i]`` translates logical column ``i`` of row ``j``
-    to its physical column in ``hops`` (identity unless the graph samples
-    retraining stalls, whose mirror markers shift columns per row)."""
+    """Dense hop tables for one event log + the maps to read the schedule
+    back.
+
+    Chain layout (``fanout="chain"``): one row per request; the ``*_cols``
+    fields index the *logical* (pre-marker) hop layout, and ``col_map[j,
+    i]`` translates logical column ``i`` of row ``j`` to its physical
+    column (identity unless the graph samples retraining stalls, whose
+    mirror markers shift columns per row).  ``snoop_rows`` is None.
+
+    Concurrent layout (``fanout="concurrent"``): the first T rows are the
+    per-request *primary* rows (the demand leg of snooped misses — join-
+    gated service + response — or the full chain of snoop-free misses;
+    hits stay empty), followed by the fork rows (request legs, BISnp
+    rows, upgrade-BISnp rows).  ``row_req`` maps every row to its request
+    index (issue vectors rebuild as ``fab_issue_ps[row_req]`` each
+    fixpoint iteration), and ``snoop_rows[j, k]`` is the row index of
+    request ``j``'s k-th BISnp round trip (-1 unused) — `bisnp_latencies`
+    reads round trips per *row* (post-join issue at column 0 to row
+    completion), so no column map is needed.  The ``*_cols`` fields still
+    describe the per-row leg spans (service hop at ``svc_col`` on demand
+    rows; BISnp out at 0 and BIRsp back at ``snoop_cols`` on snoop rows).
+    """
 
     hops: Hops
-    miss: np.ndarray          # (T,) bool — rows with fabric traffic
+    miss: np.ndarray          # (T,) bool — demand rows with fabric traffic
     fwd_cols: int             # demand request hops span [0, fwd_cols)
     snoop_cols: int           # per-leg hop span (device->owner == owner->device)
     n_snoop: int              # snoop slots per request
     svc_col: int              # endpoint service hop column (logical)
     col_map: np.ndarray       # (T, logical H) -> physical column
     n_cols: int               # total physical hop columns (markers included)
+    fanout: str = "chain"
+    row_req: np.ndarray | None = None     # (N,) request index of each row
+    snoop_rows: np.ndarray | None = None  # (T, n_snoop) BISnp row index
 
 
 class CoupledResult(NamedTuple):
@@ -104,6 +151,7 @@ class CoupledResult(NamedTuple):
     iters: int
     converged: bool
     used_oracle: bool
+    damped: int = 0              # averaged (damped) updates applied
 
 
 def _route_chans(graph: FabricGraph, src: int, dst: int):
@@ -119,39 +167,96 @@ def _route_chans(graph: FabricGraph, src: int, dst: int):
     return out
 
 
+def _owner_bits(mask: int, n_req: int, k: int) -> list[int]:
+    """First ``k`` requester indices set in a BISnp owner bitmask.  The
+    scan is bounded by the requester count (an int32 mask with bit 31 set
+    sign-extends in Python — unbounded bit positions would be phantoms)."""
+    return [b for b in range(n_req) if (mask >> b) & 1][:k]
+
+
+class _RowBuilder:
+    """Growable (rows x H) hop-table builder shared by both lowerings."""
+
+    def __init__(self, n_rows: int, h: int):
+        self.h = h
+        self.chan = np.full((n_rows, h), -1, np.int32)
+        self.nbytes = np.zeros((n_rows, h), np.int64)
+        self.direction = np.zeros((n_rows, h), np.int8)
+        self.row_id = np.full((n_rows, h), -1, np.int32)
+        self.fixed_after = np.zeros((n_rows, h), np.int64)
+        self.is_payload = np.zeros((n_rows, h), bool)
+        self.valid = np.zeros((n_rows, h), bool)
+
+    def fill_leg(self, j, k0, leg, nb, payload_flag):
+        for i, (c, d, fx) in enumerate(leg):
+            self.chan[j, k0 + i] = c
+            self.nbytes[j, k0 + i] = nb
+            self.direction[j, k0 + i] = d
+            self.fixed_after[j, k0 + i] = fx
+            self.is_payload[j, k0 + i] = payload_flag
+            self.valid[j, k0 + i] = True
+        return k0 + len(leg)
+
+    def service_hop(self, j, col, graph, spec, sf_cfg, a):
+        ep = graph.topo.endpoint
+        bank = a % ep.banks
+        self.chan[j, col] = graph.service_channel(spec.dev_node, bank)
+        self.nbytes[j, col] = sf_cfg.line_bytes
+        self.row_id[j, col] = (a // ep.lines_per_row) % (1 << 30)
+        self.fixed_after[j, col] = ep.fixed_ps
+        self.is_payload[j, col] = True
+        self.valid[j, col] = True
+
+
 def lower_coherence(graph: FabricGraph, spec: CoherenceFabricSpec,
                     sf_cfg: SFConfig, addr, is_write, rid,
-                    events: SFEvents) -> CoherenceLowering:
-    """Lower a protocol event log onto the fabric as per-request hop chains.
+                    events: SFEvents, fanout: str = "concurrent",
+                    upgrade_bisnp: bool | None = None) -> CoherenceLowering:
+    """Lower a protocol event log onto the fabric as per-request hop rows.
 
-    Row layout (fixed shape; unused spans are invalid pass-through hops):
+    ``fanout="concurrent"`` (default) — misses with k snooped owners fork
+    k concurrent BISnp rows gated on the demand request's arrival at the
+    device and join the demand leg on the slowest BIRsp (the engine's
+    max-of-arrivals primitive); write-conflict BISnps on local-cache hits
+    (``upgrade_bisnp``, default on in this mode) lower as BISnp-only fork
+    groups with no demand leg.  All writeback bytes ride the first snooped
+    owner's BIRsp leg and the InvBlk response-assembly serialization (the
+    §V-C superlinear term) lands on that leg's last hop — the same
+    protocol-cost assignment as the chain model, so the two lowerings
+    differ only in concurrency.
+
+    ``fanout="chain"`` — the serialized PR-4 lowering, bit-for-bit: one
+    hop chain per request in protocol order
 
         [demand request] [BISnp out | BIRsp back] * n_snoop [service] [response]
 
-    The chain order is the protocol order: the DCOH collects every BIRsp
-    before serving the demand miss.  All writeback bytes ride the first
-    snooped owner's BIRsp leg, and the InvBlk response-assembly
-    serialization (the §V-C superlinear term, same formula as the isolated
-    model) lands on that leg's last hop.  Stochastic link reliability, if
-    the graph carries it, samples per-hop tables and mirrors full-duplex
-    retraining stalls exactly as `devices.build_workload` does.
+    (the DCOH collecting each BIRsp before snooping the next owner), and
+    upgrade-BISnps on hits stay off the fabric (counted by
+    ``SFResult.bisnp_events`` only) — the isolated model's timing
+    semantics, preserved so coupled and isolated modes agree on every
+    protocol decision.
 
-    Only cache *misses* lower to fabric traffic.  Write-upgrade BISnps on
-    local-cache hits are counted by ``SFResult.bisnp_events`` (and appear
-    in ``SFEvents.bisnp_mask``) but stay off the fabric — the isolated
-    model's "hits never leave the requester" timing semantics, preserved
-    so coupled and isolated modes agree on every protocol decision.
+    Stochastic link reliability, if the graph carries it, samples per-hop
+    tables and mirrors full-duplex retraining stalls exactly as
+    `devices.build_workload` does.
     """
+    if fanout not in FANOUT_MODES:
+        raise ValueError(f"unknown fanout {fanout!r}")
+    if upgrade_bisnp is None:
+        upgrade_bisnp = fanout == "concurrent"
+    if upgrade_bisnp and fanout == "chain":
+        raise ValueError("upgrade-BISnp lowering needs fanout='concurrent' "
+                         "(the chain layout is the exact PR-4 one)")
     addr = np.asarray(addr)
     is_write = np.asarray(is_write, bool)
     rid = np.asarray(rid)
     hit = np.asarray(events.cache_hit)
+    conflict = np.asarray(events.conflict)
     mask = np.asarray(events.bisnp_mask)
     wb = np.asarray(events.wb_lines)
     blk = np.asarray(events.invblk_len)
     T = int(hit.shape[0])
     K = spec.n_snoop()
-    ep = graph.topo.endpoint
     hdr = spec.header_bytes
     line = sf_cfg.line_bytes
 
@@ -162,78 +267,179 @@ def lower_coherence(graph: FabricGraph, spec: CoherenceFabricSpec,
     # a direction-asymmetric fabric can have unequal hop counts
     Fmax = Smax = max(max(len(p) for p in to_dev),
                       max(len(p) for p in to_req))
+
+    if fanout == "chain":
+        b = _chain_rows(graph, spec, sf_cfg, addr, is_write, rid,
+                        hit, mask, wb, blk, T, K, Fmax, Smax, hdr, line,
+                        to_dev, to_req)
+        svc = Fmax + 2 * K * Smax
+        hops = finish_hops(graph, link_layer.normalize(None), b.chan,
+                           b.nbytes, b.direction, b.row_id, b.fixed_after,
+                           b.is_payload, b.valid, stream_salt=0x636F68)
+        return CoherenceLowering(
+            hops=hops, miss=~hit, fwd_cols=Fmax, snoop_cols=Smax, n_snoop=K,
+            svc_col=svc, col_map=marker_column_map(hops),
+            n_cols=int(hops.channel.shape[1]), fanout="chain",
+            row_req=np.arange(T, dtype=np.int64), snoop_rows=None,
+        )
+
+    # ---- concurrent fan-out ------------------------------------------------
+    # Row budget: each snooped miss adds a request-leg (fork) row + k BISnp
+    # rows; each upgrade conflict adds its k BISnp rows.  Primary rows keep
+    # the request index, so the coupled loop's completion reads stay [:T].
+    owners_of = [_owner_bits(int(mask[j]), len(spec.req_nodes), K)
+                 for j in range(T)]
+    n_extra = 0
+    for j in range(T):
+        if hit[j]:
+            if upgrade_bisnp and conflict[j]:
+                n_extra += len(owners_of[j])
+        elif owners_of[j]:
+            n_extra += 1 + len(owners_of[j])
+    svc = Fmax                       # service col on every demand row
+    H = 2 * Fmax + 1                 # [request] [service] [response]
+    N = T + n_extra
+    b = _RowBuilder(N, H)
+    join_id = np.full(N, -1, np.int32)
+    join_wait = np.full(N, -1, np.int32)
+    join_arity = np.zeros(N, np.int32)
+    row_req = np.concatenate(
+        [np.arange(T, dtype=np.int64), np.zeros(n_extra, np.int64)])
+    snoop_rows = np.full((T, K), -1, np.int64)
+    nxt_row = T
+    nxt_grp = 0
+
+    def snoop_row(j, k, o, with_payload):
+        """One BISnp round trip: device->owner out leg (+owner cache probe),
+        owner->device BIRsp back (first slot carries writebacks + the InvBlk
+        response-assembly serialization when ``with_payload``)."""
+        nonlocal nxt_row
+        rrow = nxt_row
+        nxt_row += 1
+        row_req[rrow] = j
+        end = b.fill_leg(rrow, 0, to_req[o], hdr, False)          # BISnp out
+        b.fixed_after[rrow, end - 1] += sf_cfg.t_cache_ps         # owner probe
+        back_b = hdr + (int(wb[j]) * line if with_payload else 0)
+        end = b.fill_leg(rrow, Smax, to_dev[o], back_b,
+                         with_payload and int(wb[j]) > 0)         # BIRsp back
+        if with_payload:
+            extra = max(int(blk[j]) - 1, 0)
+            b.fixed_after[rrow, end - 1] += (extra * sf_cfg.t_cache_ps
+                                             + extra * extra
+                                             * sf_cfg.probe_conflict_ps)
+        snoop_rows[j, k] = rrow
+        return rrow
+
+    for j in range(T):
+        owners = owners_of[j]
+        if hit[j]:
+            # upgrade-BISnp: the write hit's conflict snoops the other
+            # sharers — reverse traffic with no demand leg; the hit's own
+            # latency is untouched (decisions and timing stay the isolated
+            # model's; only *other* traffic feels the congestion)
+            if upgrade_bisnp and conflict[j]:
+                for k, o in enumerate(owners):
+                    snoop_row(j, k, o, with_payload=False)
+            continue
+        r = int(rid[j])
+        fwd_b, bwd_b, fwd_pay, bwd_pay = packetize(
+            "esf", bool(is_write[j]), line, hdr)
+        if not owners:               # snoop-free miss: plain chain row
+            b.fill_leg(j, 0, to_dev[r], fwd_b, fwd_pay)
+        else:
+            # fork: the request leg completes at the device and releases
+            # the k concurrent BISnp rows; the demand leg joins on the
+            # slowest BIRsp (max-of-arrivals) before the endpoint serves
+            g_req, g_rsp = nxt_grp, nxt_grp + 1
+            nxt_grp += 2
+            arow = nxt_row
+            nxt_row += 1
+            row_req[arow] = j
+            b.fill_leg(arow, 0, to_dev[r], fwd_b, fwd_pay)
+            join_id[arow] = g_req
+            for k, o in enumerate(owners):
+                rrow = snoop_row(j, k, o, with_payload=k == 0)
+                join_wait[rrow] = g_req
+                join_arity[rrow] = 1
+                join_id[rrow] = g_rsp
+            join_wait[j] = g_rsp
+            join_arity[j] = len(owners)
+        b.service_hop(j, svc, graph, spec, sf_cfg, int(addr[j]))
+        b.fill_leg(j, svc + 1, to_req[r], bwd_b, bwd_pay)
+
+    hops = finish_hops(graph, link_layer.normalize(None), b.chan, b.nbytes,
+                       b.direction, b.row_id, b.fixed_after, b.is_payload,
+                       b.valid, stream_salt=0x636F68,
+                       join_id=join_id, join_wait=join_wait,
+                       join_arity=join_arity)
+    return CoherenceLowering(
+        hops=hops, miss=~hit, fwd_cols=Fmax, snoop_cols=Smax, n_snoop=K,
+        svc_col=svc, col_map=marker_column_map(hops),
+        n_cols=int(hops.channel.shape[1]), fanout="concurrent",
+        row_req=row_req, snoop_rows=snoop_rows,
+    )
+
+
+def _chain_rows(graph, spec, sf_cfg, addr, is_write, rid, hit, mask, wb, blk,
+                T, K, Fmax, Smax, hdr, line, to_dev, to_req) -> _RowBuilder:
+    """The serialized PR-4 row layout (fixed shape; unused spans are invalid
+    pass-through hops):
+
+        [demand request] [BISnp out | BIRsp back] * n_snoop [service] [response]
+
+    The chain order is the protocol order: the DCOH collects every BIRsp
+    before serving the demand miss.  Only cache *misses* lower to fabric
+    traffic here (upgrade-BISnps need the concurrent layout's extra rows).
+    """
     svc = Fmax + 2 * K * Smax
     H = svc + 1 + Fmax
-
-    chan = np.full((T, H), -1, np.int32)
-    nbytes = np.zeros((T, H), np.int64)
-    direction = np.zeros((T, H), np.int8)
-    row_id = np.full((T, H), -1, np.int32)
-    fixed_after = np.zeros((T, H), np.int64)
-    is_payload = np.zeros((T, H), bool)
-    valid = np.zeros((T, H), bool)
-
-    def fill_leg(j, k0, leg, nb, payload_flag):
-        for i, (c, d, fx) in enumerate(leg):
-            chan[j, k0 + i] = c
-            nbytes[j, k0 + i] = nb
-            direction[j, k0 + i] = d
-            fixed_after[j, k0 + i] = fx
-            is_payload[j, k0 + i] = payload_flag
-            valid[j, k0 + i] = True
-        return k0 + len(leg)
-
+    b = _RowBuilder(T, H)
     for j in range(T):
         if hit[j]:
             continue                       # hits never reach the fabric
         r = int(rid[j])
         fwd_b, bwd_b, fwd_pay, bwd_pay = packetize(
             "esf", bool(is_write[j]), line, hdr)
-        fill_leg(j, 0, to_dev[r], fwd_b, fwd_pay)
-        owners = [b for b in range(len(spec.req_nodes))
-                  if (int(mask[j]) >> b) & 1][:K]
+        b.fill_leg(j, 0, to_dev[r], fwd_b, fwd_pay)
+        owners = _owner_bits(int(mask[j]), len(spec.req_nodes), K)
         for k, o in enumerate(owners):
             k0 = Fmax + 2 * k * Smax
-            end = fill_leg(j, k0, to_req[o], hdr, False)      # BISnp out
-            fixed_after[j, end - 1] += sf_cfg.t_cache_ps      # owner probe
+            end = b.fill_leg(j, k0, to_req[o], hdr, False)        # BISnp out
+            b.fixed_after[j, end - 1] += sf_cfg.t_cache_ps        # owner probe
             back_b = hdr + (int(wb[j]) * line if k == 0 else 0)
-            end = fill_leg(j, k0 + Smax, to_dev[o], back_b,
-                           k == 0 and int(wb[j]) > 0)         # BIRsp back
+            end = b.fill_leg(j, k0 + Smax, to_dev[o], back_b,
+                             k == 0 and int(wb[j]) > 0)           # BIRsp back
             if k == 0:
                 extra = max(int(blk[j]) - 1, 0)
-                fixed_after[j, end - 1] += (extra * sf_cfg.t_cache_ps
-                                            + extra * extra
-                                            * sf_cfg.probe_conflict_ps)
-        bank = int(addr[j]) % ep.banks
-        chan[j, svc] = graph.service_channel(spec.dev_node, bank)
-        nbytes[j, svc] = line
-        row_id[j, svc] = (int(addr[j]) // ep.lines_per_row) % (1 << 30)
-        fixed_after[j, svc] = ep.fixed_ps
-        is_payload[j, svc] = True
-        valid[j, svc] = True
-        fill_leg(j, svc + 1, to_req[r], bwd_b, bwd_pay)
-
-    # distinct reliability stream salt: coherence rows are co-scheduled
-    # with demand workloads sampled from the unsalted streams, and the two
-    # must draw independent fault histories
-    hops = finish_hops(graph, link_layer.normalize(None), chan, nbytes,
-                       direction, row_id, fixed_after, is_payload, valid,
-                       stream_salt=0x636F68)   # "coh"
-    return CoherenceLowering(
-        hops=hops, miss=~hit, fwd_cols=Fmax, snoop_cols=Smax, n_snoop=K,
-        svc_col=svc, col_map=marker_column_map(hops),
-        n_cols=int(hops.channel.shape[1]),
-    )
+                b.fixed_after[j, end - 1] += (extra * sf_cfg.t_cache_ps
+                                              + extra * extra
+                                              * sf_cfg.probe_conflict_ps)
+        b.service_hop(j, svc, graph, spec, sf_cfg, int(addr[j]))
+        b.fill_leg(j, svc + 1, to_req[r], bwd_b, bwd_pay)
+    return b
 
 
 def bisnp_latencies(sched: Schedule, low: CoherenceLowering) -> jnp.ndarray:
-    """Per-request, per-slot BISnp round trips: arrival after the BIRsp leg
-    minus arrival at the BISnp leg (0 for unused slots — invalid hops pass
-    arrivals through unchanged).  Logical columns go through ``col_map``,
-    so the read is exact even when retraining markers shifted the rows.
-    A hop's arrival is unchanged by the marker *behind* it, so mapping the
-    logical column to its physical hop indexes the same arrival; the
-    one-past-the-end logical column maps to the physical end column."""
+    """Per-request, per-slot BISnp round trips (0 for unused slots).
+
+    Concurrent layout: each slot is its own row — round trip = row
+    completion minus the row's post-join issue (``arrive[:, 0]``, the
+    moment the demand request released the fan-out; upgrade rows issue at
+    the hit's clock directly).
+
+    Chain layout: arrival after the BIRsp leg minus arrival at the BISnp
+    leg, read through ``col_map`` so retraining markers that shifted hop
+    columns keep the read exact (a hop's arrival is unchanged by the
+    marker *behind* it, so mapping the logical column to its physical hop
+    indexes the same arrival; the one-past-the-end logical column maps to
+    the physical end column).
+    """
+    if low.snoop_rows is not None:
+        nrow = sched.complete.shape[0]
+        sr = np.minimum(np.maximum(low.snoop_rows, 0), nrow - 1)
+        rows = jnp.asarray(sr)
+        rt = sched.complete[rows] - sched.arrive[rows, 0]
+        return jnp.where(jnp.asarray(low.snoop_rows >= 0), rt, 0)
     t = low.col_map.shape[0]
     arrive = sched.arrive[:t]            # background rows ride behind
     cm = np.concatenate(
@@ -250,10 +456,58 @@ def bisnp_latencies(sched: Schedule, low: CoherenceLowering) -> jnp.ndarray:
     return jnp.stack(outs, axis=1)
 
 
+def coherence_issue(low: CoherenceLowering, fab_issue_ps) -> jnp.ndarray:
+    """Per-row issue vector of a lowering: fork/BISnp/upgrade rows inherit
+    their request's issue clock (``row_req``), which moves every fixpoint
+    iteration while the hop layout stays invariant."""
+    fab_issue_ps = jnp.asarray(fab_issue_ps)
+    if low.row_req is None:
+        return fab_issue_ps
+    return fab_issue_ps[jnp.asarray(low.row_req)]
+
+
+def pad_rows(hops: Hops, n_rows: int) -> Hops:
+    """Pad a hop table with trailing invalid rows (channel -1, no joins) so
+    lowerings of different row counts stack for a vmapped fabric pass."""
+    n, h = hops.channel.shape
+    if n_rows < n:
+        raise ValueError(f"cannot pad {n} rows down to {n_rows}")
+    if n_rows == n:
+        return hops
+    m = n_rows - n
+
+    def pad2(x, fill, dtype):
+        return jnp.concatenate(
+            [jnp.asarray(x), jnp.full((m, h), fill, dtype)])
+
+    out = Hops(
+        channel=pad2(hops.channel, -1, jnp.int32),
+        nbytes=pad2(hops.nbytes, 0, jnp.int64),
+        direction=pad2(hops.direction, 0, jnp.int8),
+        row=pad2(hops.row, -1, jnp.int32),
+        fixed_after_ps=pad2(hops.fixed_after_ps, 0, jnp.int64),
+        is_payload=pad2(hops.is_payload, False, bool),
+        valid=pad2(hops.valid, False, bool),
+    )
+    if hops.extra_wire_bytes is not None:
+        out = out._replace(
+            extra_wire_bytes=pad2(hops.extra_wire_bytes, 0, jnp.int64),
+            retrain_after_ps=pad2(hops.retrain_after_ps, 0, jnp.int64))
+    if hops.join_id is not None:
+        def pad1(x, fill):
+            return jnp.concatenate(
+                [jnp.asarray(x), jnp.full((m,), fill, jnp.int32)])
+        out = out._replace(join_id=pad1(hops.join_id, -1),
+                           join_wait=pad1(hops.join_wait, -1),
+                           join_arity=pad1(hops.join_arity, 0))
+    return out
+
+
 def concat_background(low: CoherenceLowering, issue_ps,
                       background: "Workload | None"):
     """Stack the coherence rows (first) with a background demand Workload
     built on the same graph, padding hop columns and reliability tables.
+    ``issue_ps`` must already cover every coherence row (`coherence_issue`).
     Returns ``(hops, issue)`` for the engine."""
     if background is None:
         return low.hops, jnp.asarray(issue_ps)
@@ -291,6 +545,18 @@ def concat_background(low: CoherenceLowering, issue_ps,
                 [pad(rel(a, "retrain_after_ps"), 0),
                  pad(rel(b, "retrain_after_ps"), 0)])),
         )
+    if a.join_id is not None:
+        # background rows never wait or contribute; coherence rows stay
+        # first, so group ids keep pointing at the same row index space
+        nb = b.channel.shape[0]
+        hops = hops._replace(
+            join_id=jnp.concatenate(
+                [jnp.asarray(a.join_id), jnp.full((nb,), -1, jnp.int32)]),
+            join_wait=jnp.concatenate(
+                [jnp.asarray(a.join_wait), jnp.full((nb,), -1, jnp.int32)]),
+            join_arity=jnp.concatenate(
+                [jnp.asarray(a.join_arity), jnp.zeros((nb,), jnp.int32)]),
+        )
     issue = jnp.concatenate(
         [jnp.asarray(issue_ps), jnp.asarray(background.issue_ps)])
     return hops, issue
@@ -301,7 +567,9 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
                      spec: CoherenceFabricSpec, n_requesters: int = 1,
                      background: "Workload | None" = None,
                      max_iters: int = 8, tol_ps: int = 0,
-                     max_rounds: int = 0) -> CoupledResult:
+                     max_rounds: int = 0, fanout: str = "concurrent",
+                     upgrade_bisnp: bool | None = None,
+                     damping: bool = False) -> CoupledResult:
     """Fabric-coupled DCOH simulation (the §V-B/§V-C studies with the
     infinite bus replaced by real routed CXL traffic).
 
@@ -313,6 +581,21 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
     time.  Decisions never change across iterations (stream-order
     property), so the lowering happens once; only issue times and
     latencies iterate.  Convergence: max |lat - lat_prev| <= tol_ps.
+
+    ``damping=True`` injects the *average of the last two latency
+    vectors* — ``fab <- (fab + measured) // 2`` — instead of the raw
+    measurement from the second iteration on.  Picard iteration on this
+    map can oscillate far past any practical budget (the latency response
+    to an issue-time shift is a step function: a re-timed request collides
+    with a different packet or flips a half-duplex turnaround), and the
+    averaged update collapses the oscillation amplitude geometrically:
+    configs that bounce by hundreds of ns forever converge within
+    ``tol_ps`` in a comparable budget, landing (measured) within ~1 ps of
+    the exact fixpoint.  Pass ``tol_ps >= 1`` with damping: the integer
+    floor can leave the averaged iterate sitting 1 ps from its
+    measurement indefinitely, so exact tol-0 convergence is the undamped
+    mode's job.  ``CoupledResult.damped`` counts the averaged updates.
+    The default stays undamped — PR-4 trajectories bit-for-bit.
     """
     if max_iters < 1:
         raise ValueError("max_iters must be >= 1")
@@ -324,27 +607,33 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
 
     res, ev = simulate_sf(addr_j, wr_j, rid_j, sf_cfg, cache_cfg,
                           n_requesters=n_requesters, return_events=True)
-    low = lower_coherence(graph, spec, sf_cfg, addr, is_write, rid, ev)
+    low = lower_coherence(graph, spec, sf_cfg, addr, is_write, rid, ev,
+                          fanout=fanout, upgrade_bisnp=upgrade_bisnp)
     miss = jnp.asarray(low.miss)
     T = int(miss.shape[0])
     # hop tables are a fixpoint invariant — concat with the background once;
     # only the issue vector changes across iterations
-    hops_all, _ = concat_background(low, ev.fab_issue_ps, background)
+    hops_all, _ = concat_background(low, coherence_issue(low, ev.fab_issue_ps),
+                                    background)
     bg_issue = (None if background is None
                 else jnp.asarray(background.issue_ps))
+
+    def issue_vec(ev):
+        coh = coherence_issue(low, ev.fab_issue_ps)
+        return coh if bg_issue is None else jnp.concatenate([coh, bg_issue])
 
     fab = None
     sched = None
     used_oracle = False
     iters = 0
     converged = False
+    damped = 0
     for iters in range(1, max_iters + 1):
         if fab is not None:
             res, ev = simulate_sf(addr_j, wr_j, rid_j, sf_cfg, cache_cfg,
                                   n_requesters=n_requesters,
                                   fabric_lat_ps=fab, return_events=True)
-        issue_all = (ev.fab_issue_ps if bg_issue is None
-                     else jnp.concatenate([ev.fab_issue_ps, bg_issue]))
+        issue_all = issue_vec(ev)
         sched, used_oracle = simulate_auto(hops_all, channels, issue_all,
                                            max_rounds=max_rounds)
         new_fab = jnp.where(miss, sched.complete[:T] - issue_all[:T],
@@ -353,24 +642,28 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
             fab = new_fab
             converged = True
             break
-        fab = new_fab
+        if damping and fab is not None:
+            fab = (fab + new_fab) // 2      # averaged (damped) update
+            damped += 1
+        else:
+            fab = new_fab
 
     # On exact convergence (tol 0) the loop's last SF/fabric pair already
-    # used the final ``fab`` — every reported field is consistent as is.
-    # Otherwise (tolerance break or max_iters limit cycle) run one final
-    # SF + fabric pass so sf, schedule, bisnp_lat_ps and issue_ps all
-    # belong to the same iteration.
+    # used the final ``fab`` — every reported field is consistent as is
+    # (even after damped updates: the break condition is measured ==
+    # injected).  Otherwise (tolerance break or max_iters limit cycle) run
+    # one final SF + fabric pass so sf, schedule, bisnp_lat_ps and
+    # issue_ps all belong to the same iteration.
     if not (converged and tol_ps == 0):
         res, ev = simulate_sf(addr_j, wr_j, rid_j, sf_cfg, cache_cfg,
                               n_requesters=n_requesters, fabric_lat_ps=fab,
                               return_events=True)
-        issue_all = (ev.fab_issue_ps if bg_issue is None
-                     else jnp.concatenate([ev.fab_issue_ps, bg_issue]))
+        issue_all = issue_vec(ev)
         sched, used_oracle = simulate_auto(hops_all, channels, issue_all,
                                            max_rounds=max_rounds)
     return CoupledResult(
         sf=res, events=ev, schedule=sched, lowering=low, fabric_lat_ps=fab,
         bisnp_lat_ps=bisnp_latencies(sched, low),
         issue_ps=ev.fab_issue_ps, iters=iters, converged=converged,
-        used_oracle=used_oracle,
+        used_oracle=used_oracle, damped=damped,
     )

@@ -94,6 +94,15 @@ class Workload:
     n_link_hops: np.ndarray     # (N,) link hops one way (for Fig. 11 grouping)
     route_alt: np.ndarray       # (N,) which equal-cost alternative was taken
 
+    @property
+    def n_demand(self) -> int:
+        """Count of real (routable) demand transactions.  ``build_workload``
+        appends pseudo-rows — credit-return DLLPs, requester -1 — *after*
+        the demand rows, and their count is route-dependent: anything that
+        indexes per-transaction route choices (`core.routing`) or
+        per-request metrics must address the demand prefix only."""
+        return int((self.requester >= 0).sum())
+
 
 def _gen_addresses(spec: RequesterSpec, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     n = spec.n_requests
@@ -162,7 +171,8 @@ def _credit_dllp_plan(graph: FabricGraph, override: link_layer.FlitConfig):
 
 def finish_hops(graph: FabricGraph, flit_cfg: "link_layer.FlitConfig",
                 chan, nbytes, direction, row_id, fixed_after, is_payload,
-                valid, stream_salt: int = 0) -> Hops:
+                valid, stream_salt: int = 0, join_id=None, join_wait=None,
+                join_arity=None) -> Hops:
     """Final build step shared by every hop-table producer: sample the
     stochastic link-reliability tables (when the graph or override carries
     them) and mirror full-duplex retraining stalls onto the paired channel
@@ -174,7 +184,14 @@ def finish_hops(graph: FabricGraph, flit_cfg: "link_layer.FlitConfig",
     (e.g. coherence rows alongside a background workload) must pass a
     distinct salt, or the two tables replay byte-identical fault
     histories instead of independent draws.
+
+    The optional per-row ``join_id``/``join_wait``/``join_arity`` triple
+    (the engine fork/join primitive, all three or none) passes through
+    untouched: marker insertion only shifts hop *columns*, never rows.
     """
+    joins = (join_id, join_wait, join_arity)
+    if any(j is not None for j in joins) and any(j is None for j in joins):
+        raise ValueError("join_id/join_wait/join_arity come as a triple")
     extra_wire = retrain_after = None
     rel = _reliability_tables(graph, flit_cfg)
     if rel is not None:
@@ -196,6 +213,11 @@ def finish_hops(graph: FabricGraph, flit_cfg: "link_layer.FlitConfig",
     if extra_wire is not None:
         hops = hops._replace(extra_wire_bytes=jnp.asarray(extra_wire),
                              retrain_after_ps=jnp.asarray(retrain_after))
+    if join_id is not None:
+        hops = hops._replace(
+            join_id=jnp.asarray(join_id, jnp.int32),
+            join_wait=jnp.asarray(join_wait, jnp.int32),
+            join_arity=jnp.asarray(join_arity, jnp.int32))
     return hops
 
 

@@ -114,13 +114,31 @@ class Channels(NamedTuple):
 class Hops(NamedTuple):
     """Per-transaction hop table, shape (N, H); padded hops have valid=False.
 
-    The two optional tables carry the stochastic link-reliability samples
-    (`core.link_layer.sample_hop_tables`, seeded at build time):
+    The two optional (N, H) tables carry the stochastic link-reliability
+    samples (`core.link_layer.sample_hop_tables`, seeded at build time):
     ``extra_wire_bytes`` — sampled Go-Back-N replay wire bytes added to the
     hop's serialization; ``retrain_after_ps`` — link-down interval the hop's
     channel enters when the hop departs (retraining stall; the channel
     grants nothing until it ends).  ``None`` — the deterministic
     expected-value layout — keeps the scan structurally identical to PR 1.
+
+    The three optional (N,) tables are the **fork/join primitive**: a row
+    whose ``join_wait >= 0`` does not issue at its nominal issue time but at
+    ``max(issue, max completion of every row whose join_id names the same
+    group)`` — max-of-arrivals join semantics (a DCOH collecting the *last*
+    BIRsp of a concurrent BISnp fan-out, CXL 3.x BI flows).  ``join_id``
+    marks a row as a contributor to a group; ``join_arity`` (meaningful on
+    waiter rows) is the contract: the number of contributors the group must
+    receive, which the event-driven oracle uses as its release count and
+    validates against the table.  Group ids live in the row index space —
+    ``0 <= id < N`` — because the engine resolves group maxes with an
+    N-sized scatter (the oracle validates the bound).  Groups must form a
+    DAG through rows
+    (a row may both wait on one group and contribute to another — the
+    coherence lowering chains request -> snoop fan-out -> demand leg this
+    way); a cycle deadlocks the oracle (detected and raised) and never
+    converges in the engine.  ``None`` — no joins — keeps the fixpoint
+    structurally identical to the chain-only engine.
     """
 
     channel: jnp.ndarray      # (N, H) int32
@@ -132,6 +150,9 @@ class Hops(NamedTuple):
     valid: jnp.ndarray        # (N, H) bool
     extra_wire_bytes: jnp.ndarray | None = None   # (N, H) int64
     retrain_after_ps: jnp.ndarray | None = None   # (N, H) int64
+    join_id: jnp.ndarray | None = None     # (N,) int32 group fed, -1 = none
+    join_wait: jnp.ndarray | None = None   # (N,) int32 group gating issue, -1
+    join_arity: jnp.ndarray | None = None  # (N,) int32 contributors expected
 
 
 class Schedule(NamedTuple):
@@ -262,20 +283,47 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
     return new_arrive, start, depart
 
 
+def _join_gate(hops: Hops, issue_ps, arrive):
+    """Fork/join issue gating: the effective issue time of a waiter row is
+    ``max(issue, max completion of its group's contributors)``.
+
+    Group maxes are resolved as a scatter-max over the current iterate's
+    completion column — a per-group running max folded between FCFS scan
+    rounds rather than inside one (the scan runs in (channel, arrival)
+    order, where a running max over completions is not computable; between
+    rounds it is exact at the fixpoint, and join delays only ever grow, so
+    the contention-free initialization stays a valid lower bound).
+    """
+    n, h = hops.channel.shape
+    comp = arrive[:, h]
+    contrib = hops.join_id >= 0
+    gmax = jnp.zeros((n,), jnp.int64).at[
+        jnp.where(contrib, hops.join_id, 0)
+    ].max(jnp.where(contrib, comp, jnp.int64(0)))
+    wait = hops.join_wait >= 0
+    gate = gmax[jnp.clip(hops.join_wait, 0, n - 1)]
+    return jnp.where(wait, jnp.maximum(issue_ps, gate), issue_ps)
+
+
 @functools.partial(jax.jit, static_argnames=("max_rounds",))
 def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
              max_rounds: int = 0) -> Schedule:
     """Resolve the exact FCFS schedule of all transactions.
 
-    max_rounds=0 picks ``3*H + 8`` (always sufficient in testing; convergence
-    is verified and reported in ``Schedule.converged``).
+    max_rounds=0 picks ``3*H + 8`` (always sufficient for chain-only
+    traffic in testing; fork/join tables deepen the dependency graph across
+    rows, so join-heavy lowerings pass an explicit budget or go through
+    ``simulate_auto``).  Convergence is verified and reported in
+    ``Schedule.converged``.
     """
     n, h = hops.channel.shape
     rounds = max_rounds if max_rounds > 0 else 3 * h + 8
+    has_join = hops.join_id is not None
 
     # contention-free lower bound initialization (sampled replay stretch
-    # included: it delays the item even uncontended; retraining stalls only
-    # ever delay *other* items, so they keep this a valid lower bound)
+    # included: it delays the item even uncontended; retraining stalls and
+    # join gates only ever delay items, so they keep this a valid lower
+    # bound)
     ser0 = wire_ser_ps(hops.nbytes, channels,
                        jnp.minimum(hops.channel, channels.bw_MBps.shape[0] - 1),
                        extra_wire=hops.extra_wire_bytes)
@@ -290,7 +338,10 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
 
     def body(state):
         i, arrive, _, _, _ = state
-        new_arrive, start, depart = _one_round(hops, channels, issue_ps, arrive)
+        eff_issue = (_join_gate(hops, issue_ps, arrive) if has_join
+                     else issue_ps)
+        new_arrive, start, depart = _one_round(hops, channels, eff_issue,
+                                               arrive)
         changed = jnp.any(new_arrive != arrive)
         return i + 1, new_arrive, start, depart, changed
 

@@ -29,6 +29,15 @@ Semantics (must match `core.engine.simulate` bit-for-bit):
     (arrival, flat index) — the engine's segmented-scan semantics.  It is
     processed punctually at its arrival (never queued), so its own
     transaction chain continues undelayed;
+  * fork/join (per-row ``join_id`` / ``join_wait`` / ``join_arity`` in
+    `Hops`): a waiter row is held back until every contributor of its
+    group has completed, then issues at ``max(issue, slowest contributor
+    completion)`` — max-of-arrivals join semantics.  The release is
+    event-driven: the group's ``join_arity``-th completion triggers it,
+    and ``join_arity`` is validated against the actual contributor count
+    (the lowering contract).  A release lands at exactly the completing
+    row's timestamp, so all arrivals of a timestamp — including cascaded
+    releases — are drained before any channel serves (see the batch loop);
   * arrival at hop h+1 = departure at hop h + fixed_after[h].
 """
 
@@ -63,6 +72,12 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
                   if hops.extra_wire_bytes is not None else None)
     retrain = (np.asarray(hops.retrain_after_ps)
                if hops.retrain_after_ps is not None else None)
+    join_id = (np.asarray(hops.join_id)
+               if hops.join_id is not None else None)
+    join_wait = (np.asarray(hops.join_wait)
+                 if hops.join_wait is not None else None)
+    join_arity = (np.asarray(hops.join_arity)
+                  if hops.join_arity is not None else None)
 
     def ser_time(p: int, hop: int, c: int) -> int:
         nb = int(nbytes[p, hop])
@@ -86,10 +101,39 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
     queues = {}       # channel -> heap of (arrival, flat_idx, pkt, hop)
     markers = {}      # channel -> list of ((arrival, flat_idx), down_end)
 
+    # fork/join state: contributor counts, running (count, max-completion)
+    # per group, and the waiter rows each group releases on completion
+    if join_id is not None:
+        if max(int(join_id.max()), int(join_wait.max())) >= n:
+            raise ValueError(
+                f"join group ids must be < n_rows ({n}): the engine "
+                "resolves group maxes with a row-indexed scatter")
+        n_contrib = np.zeros(n, np.int64)
+        for p in range(n):
+            if join_id[p] >= 0:
+                n_contrib[join_id[p]] += 1
+        waiters = {}
+        for p in range(n):
+            g = int(join_wait[p])
+            if g < 0:
+                continue
+            if int(join_arity[p]) != int(n_contrib[g]):
+                raise ValueError(
+                    f"row {p}: join_arity {int(join_arity[p])} != "
+                    f"{int(n_contrib[g])} contributors of group {g}")
+            if n_contrib[g] > 0:      # empty groups never gate (engine: max
+                waiters.setdefault(g, []).append(p)   # over nothing == 0)
+        jdone = {}                    # group -> [completions seen, max comp]
+        completed = np.zeros(n, bool)
+        released = np.zeros(n, bool)
+
     # event heap: (time, seq, kind, payload)  kind 0=arrival at hop, 1=channel free
     ev = []
     seq = 0
     for p in range(n):
+        if join_id is not None and int(join_wait[p]) >= 0 \
+                and n_contrib[int(join_wait[p])] > 0:
+            continue                  # held until the group's join releases
         arrive[p, 0] = issue[p]
         heapq.heappush(ev, (int(issue[p]), seq, 0, (p, 0)))
         seq += 1
@@ -139,21 +183,46 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
         heapq.heappush(ev, (int(arrive[p, hop + 1]), seq, 0, (p, hop + 1))); seq += 1
         heapq.heappush(ev, (dp, seq, 1, c)); seq += 1
 
+    def complete_row(p):
+        """Row p reached its completion column: feed its join group and
+        release the group's waiters once the arity-th contributor lands."""
+        nonlocal seq
+        if join_id is None or completed[p]:
+            return
+        completed[p] = True
+        g = int(join_id[p])
+        if g < 0:
+            return
+        cnt, gmax = jdone.get(g, (0, 0))
+        cnt, gmax = cnt + 1, max(gmax, int(arrive[p, h]))
+        jdone[g] = (cnt, gmax)
+        if cnt < n_contrib[g]:
+            return
+        for w in waiters.get(g, ()):
+            if released[w]:
+                continue
+            released[w] = True
+            arrive[w, 0] = max(int(issue[w]), gmax)
+            heapq.heappush(ev, (int(arrive[w, 0]), seq, 0, (w, 0)))
+            seq += 1
+
     # Events are processed in *timestamp batches*: every event at the
     # current time is drained — arrivals enqueued, link-down markers
-    # registered — before any channel serves.  Within one timestamp the
-    # serve order is then fully determined by the queue key (arrival,
-    # flat index), independent of event delivery order — exactly the
-    # engine's global sort order, which is what makes equality bit-exact
-    # even when many arrivals tie (regular traffic like the coherence
-    # lowering produces dense ties).
+    # registered, join releases cascaded — before any channel serves.
+    # Within one timestamp the serve order is then fully determined by the
+    # queue key (arrival, flat index), independent of event delivery
+    # order — exactly the engine's global sort order, which is what makes
+    # equality bit-exact even when many arrivals tie (regular traffic like
+    # the coherence lowering produces dense ties).  Arrivals are processed
+    # one pop at a time (not pre-collected) because a join release lands at
+    # exactly the completing row's timestamp: the released row's first hop
+    # must enter its channel queue before this timestamp's serves, or a
+    # same-arrival larger-flat-index item would overtake it.
     while ev:
         now = ev[0][0]
-        batch = []
-        while ev and ev[0][0] == now:
-            batch.append(heapq.heappop(ev))
         serves = []
-        for _, _, kind, payload in batch:
+        while ev and ev[0][0] == now:
+            _, _, kind, payload = heapq.heappop(ev)
             if kind != 0:
                 serves.append(payload)
                 continue
@@ -177,6 +246,7 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
                 )
                 hop += 1
             if hop >= h:
+                complete_row(p)
                 continue
             c = int(chan[p, hop])
             queues.setdefault(c, [])
@@ -184,9 +254,16 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
                            (int(arrive[p, hop]), p * h + hop, p, hop))
             serves.append(c)
         for c in serves:
-            if isinstance(c, tuple):    # legacy no-op payload
-                continue
             try_serve(c, now)
+
+    if join_id is not None:
+        stuck = [p for p in range(n)
+                 if int(join_wait[p]) >= 0 and n_contrib[int(join_wait[p])] > 0
+                 and not released[p]]
+        if stuck:
+            raise RuntimeError(
+                f"join deadlock: rows {stuck[:8]} were never released — "
+                "the join groups do not form a DAG")
 
     return {
         "arrive": arrive,

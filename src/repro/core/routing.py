@@ -42,10 +42,10 @@ def route_and_simulate(graph: FabricGraph, specs, strategy: str = "oblivious",
     rng = np.random.default_rng(seed)
 
     wl = build_workload(graph, specs, **build_kw)
-    # real transactions only: build_workload appends pseudo-rows (requester
-    # -1, e.g. credit-return DLLPs) after the demand rows, and their count
-    # is route-dependent — route choices index the demand prefix
-    n = int((wl.requester >= 0).sum())
+    # real transactions only: pseudo-rows (requester -1, e.g. credit-return
+    # DLLPs) ride after the demand rows and their count is route-dependent —
+    # route choices index the demand prefix (`Workload.n_demand`)
+    n = wl.n_demand
 
     if strategy == "oblivious":
         sched = simulate(wl.hops, wl.channels, wl.issue_ps)

@@ -32,10 +32,11 @@ path:
 
   * ``return_events=True`` additionally returns a dense per-request
     `SFEvents` log — the protocol decisions (hit/miss, BISnp target owner
-    mask, InvBlk run length, writeback lines) plus the time each miss
-    leaves the requester.  Decisions depend only on the request stream
-    order, never on latencies, so the log is a fixed point of the outer
-    coupling loop by construction.
+    mask, InvBlk run length, writeback lines) plus a per-request issue
+    clock (every request, hits included — the hook the upgrade-BISnp
+    lowering issues its fork groups at).  Decisions depend only on the
+    request stream order, never on latencies, so the log is a fixed point
+    of the outer coupling loop by construction.
   * ``fabric_lat_ps`` (per-request int64) replaces the whole analytic
     miss path (bus + link RTT + controller + BISnp round trips +
     writebacks) with a measured fabric latency: ``lat_miss = t_cache +
@@ -91,9 +92,17 @@ class SFEvents(NamedTuple):
     processes requests in input order regardless of clocks), so the log is
     identical whether latencies come from the analytic constants or from a
     fabric measurement — the invariant `core.coherence_traffic` relies on.
+
+    ``fab_issue_ps`` is recorded for **every** request, hits included: it
+    is the per-requester clock after the local cache access (``t +
+    t_cache``) — the moment a miss leaves the requester, and the issue
+    clock of the upgrade-BISnp fork group a write-conflict *hit* triggers
+    (`coherence_traffic.lower_coherence(fanout="concurrent")`; the hit's
+    own latency never sees the fabric, preserving the seed's
+    "hits never leave the requester" timing bit-exactly).
     """
 
-    fab_issue_ps: jnp.ndarray   # (T,) time the miss leaves the requester
+    fab_issue_ps: jnp.ndarray   # (T,) per-request issue clock (see above)
     cache_hit: jnp.ndarray      # (T,) bool — hits never reach the fabric
     bisnp_mask: jnp.ndarray     # (T,) int32 bitmask of snooped requesters
     inv_lines: jnp.ndarray      # (T,) int32 lines invalidated by this request

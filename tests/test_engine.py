@@ -100,6 +100,150 @@ def test_simulate_auto_falls_back_on_natural_nonconvergence():
     assert np.array_equal(np.asarray(sched.depart), ref["depart"])
 
 
+# ---------------------------------------------------------------------------
+# fork/join primitive: max-of-arrivals joins, engine == oracle bit-exact
+# ---------------------------------------------------------------------------
+
+def _join_case(seed, layers=3):
+    """Random hop tables + a random layered join DAG: layer k rows feed
+    groups that gate layer k+1 rows (contributor arity varies; some rows
+    join nothing, one waiter rides an empty group)."""
+    rng = np.random.default_rng(seed)
+    n, h, c = int(rng.integers(12, 36)), int(rng.integers(2, 5)), int(rng.integers(2, 5))
+    bw = rng.integers(10, 100, c).astype(np.int64) * 1000
+    ch = Channels(jnp.asarray(bw),
+                  jnp.asarray(np.where(rng.random(c) < .4,
+                                       rng.integers(100, 4000, c), 0)
+                              .astype(np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)))
+    chan = rng.integers(0, c, (n, h)).astype(np.int32)
+    nbytes = rng.integers(1, 400, (n, h)).astype(np.int64)
+    nbytes = np.where(rng.random((n, h)) < 0.15, 0, nbytes)
+    valid = rng.random((n, h)) < .85
+    jid = np.full(n, -1, np.int32)
+    jwait = np.full(n, -1, np.int32)
+    jarity = np.zeros(n, np.int32)
+    # split rows into layers; rows of layer k+1 wait on groups fed by
+    # random subsets of layer k (strictly layered => DAG)
+    bounds = np.sort(rng.choice(np.arange(1, n), layers, replace=False))
+    layer_rows = np.split(np.arange(n), bounds)
+    grp = 0
+    for up, dn in zip(layer_rows[:-1], layer_rows[1:]):
+        for w in dn:
+            if rng.random() < 0.5:
+                members = up[rng.random(up.shape[0]) < 0.5]
+                members = members[jid[members] < 0]
+                if members.size == 0:
+                    continue
+                jid[members] = grp
+                jwait[w] = grp
+                jarity[w] = members.size
+                grp += 1
+    # one waiter on an empty group: must issue at its own time
+    free = np.nonzero(jwait < 0)[0]
+    if free.size:
+        jwait[free[-1]] = grp
+        jarity[free[-1]] = 0
+    hops = Hops(jnp.asarray(chan), jnp.asarray(nbytes),
+                jnp.asarray(rng.integers(0, 2, (n, h)).astype(np.int8)),
+                jnp.asarray(np.full((n, h), -1, np.int32)),
+                jnp.asarray(rng.integers(0, 2000, (n, h)).astype(np.int64)),
+                jnp.asarray(valid), jnp.asarray(valid),
+                join_id=jnp.asarray(jid), join_wait=jnp.asarray(jwait),
+                join_arity=jnp.asarray(jarity))
+    issue = np.sort(rng.integers(0, 5000, n)).astype(np.int64)
+    return hops, ch, issue
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_fork_join_engine_matches_oracle(seed):
+    hops, ch, issue = _join_case(seed)
+    sched = simulate(hops, ch, jnp.asarray(issue), max_rounds=400)
+    ref = simulate_ref(hops, ch, issue)
+    assert bool(sched.converged)
+    assert np.array_equal(np.asarray(sched.complete), ref["complete"])
+    assert np.array_equal(np.asarray(sched.start), ref["start"])
+    assert np.array_equal(np.asarray(sched.depart), ref["depart"])
+
+
+def test_join_waits_for_slowest_contributor():
+    """Deterministic 3-row fan-in: the waiter issues exactly at the max of
+    its contributors' completions (max-of-arrivals semantics)."""
+    c = 3
+    ch = Channels(jnp.asarray(np.full(c, 1000, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)))
+    # rows 0,1 on distinct channels with different service; row 2 waits
+    chan = np.array([[0], [1], [2]], np.int32)
+    nbytes = np.array([[100], [300], [50]], np.int64)
+    fixed = np.array([[7_000], [11_000], [0]], np.int64)
+    valid = np.ones((3, 1), bool)
+    hops = Hops(jnp.asarray(chan), jnp.asarray(nbytes),
+                jnp.asarray(np.zeros((3, 1), np.int8)),
+                jnp.asarray(np.full((3, 1), -1, np.int32)),
+                jnp.asarray(fixed), jnp.asarray(valid), jnp.asarray(valid),
+                join_id=jnp.asarray(np.array([1, 1, -1], np.int32)),
+                join_wait=jnp.asarray(np.array([-1, -1, 1], np.int32)),
+                join_arity=jnp.asarray(np.array([0, 0, 2], np.int32)))
+    issue = jnp.asarray(np.array([0, 0, 0], np.int64))
+    sched = simulate(hops, ch, issue, max_rounds=100)
+    assert bool(sched.converged)
+    comp = np.asarray(sched.complete)
+    # ser = bytes*1e6/1000 MBps: row0 = 100_000+7_000, row1 = 300_000+11_000
+    assert comp[0] == 107_000 and comp[1] == 311_000
+    a2 = np.asarray(sched.arrive)[2, 0]
+    assert a2 == max(comp[0], comp[1])       # slowest BIRsp releases the join
+    assert comp[2] == a2 + 50_000
+    ref = simulate_ref(hops, ch, np.asarray(issue))
+    assert np.array_equal(comp, ref["complete"])
+
+
+def test_join_cycle_deadlock_raises_in_oracle():
+    """Cyclic join groups violate the DAG contract: the oracle detects the
+    never-released waiters instead of silently dropping their rows."""
+    c = 1
+    ch = Channels(jnp.asarray(np.full(c, 1000, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)))
+    ones = np.ones((2, 1), bool)
+    hops = Hops(jnp.asarray(np.zeros((2, 1), np.int32)),
+                jnp.asarray(np.full((2, 1), 10, np.int64)),
+                jnp.asarray(np.zeros((2, 1), np.int8)),
+                jnp.asarray(np.full((2, 1), -1, np.int32)),
+                jnp.asarray(np.zeros((2, 1), np.int64)),
+                jnp.asarray(ones), jnp.asarray(ones),
+                join_id=jnp.asarray(np.array([0, 1], np.int32)),
+                join_wait=jnp.asarray(np.array([1, 0], np.int32)),
+                join_arity=jnp.asarray(np.array([1, 1], np.int32)))
+    with pytest.raises(RuntimeError, match="join deadlock"):
+        simulate_ref(hops, ch, np.zeros(2, np.int64))
+
+
+def test_join_arity_contract_validated():
+    """join_arity must equal the group's actual contributor count — the
+    lowering contract the oracle enforces."""
+    c = 1
+    ch = Channels(jnp.asarray(np.full(c, 1000, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)))
+    ones = np.ones((2, 1), bool)
+    hops = Hops(jnp.asarray(np.zeros((2, 1), np.int32)),
+                jnp.asarray(np.full((2, 1), 10, np.int64)),
+                jnp.asarray(np.zeros((2, 1), np.int8)),
+                jnp.asarray(np.full((2, 1), -1, np.int32)),
+                jnp.asarray(np.zeros((2, 1), np.int64)),
+                jnp.asarray(ones), jnp.asarray(ones),
+                join_id=jnp.asarray(np.array([0, -1], np.int32)),
+                join_wait=jnp.asarray(np.array([-1, 0], np.int32)),
+                join_arity=jnp.asarray(np.array([0, 2], np.int32)))
+    with pytest.raises(ValueError, match="join_arity"):
+        simulate_ref(hops, ch, np.zeros(2, np.int64))
+
+
 def test_channel_conservation():
     """No channel is busy more than wall-clock; payload time <= busy time."""
     hops, ch, issue, _ = _random_case(3)
