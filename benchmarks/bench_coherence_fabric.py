@@ -172,7 +172,8 @@ def coupled_policy_sweep(stream, capacity: int, footprint: int,
     sf = {p: isolated[p] for p in policies}
     sched = None
     done = False
-    for _ in range(max_iters):
+    iters_used = 0
+    for iters_used in range(1, max_iters + 1):
         issues = []
         for p in policies:
             if fab[p] is not None:
@@ -223,6 +224,14 @@ def coupled_policy_sweep(stream, capacity: int, footprint: int,
             if (bl > 0).any() else 0.0,
             "bisnp_model_ns": cfgs[p].bisnp_rtt_ps / 1e3,
         }
+    # convergence telemetry riding into --json rows (ISSUE 6): the trend
+    # the planned round-budget/Pallas work will gate against
+    out["_meta"] = {
+        "fixpoint_iters": iters_used,
+        "fixpoint_converged": bool(done),
+        "engine_rounds": [int(r) for r in np.asarray(sched.rounds)],
+        "engine_converged": bool(sched.converged.all()),
+    }
     return out
 
 
@@ -282,6 +291,7 @@ def run_fanout_sweep(owner_counts=(1, 2, 3, 4), n: int = 600,
         _, ev = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=cap),
                             n_requesters=r_cnt, return_events=True)
         lat = {}
+        rounds = {}
         owners = np.zeros(1)
         for fanout in ("chain", "concurrent"):
             low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev,
@@ -290,6 +300,7 @@ def run_fanout_sweep(owner_counts=(1, 2, 3, 4), n: int = 600,
             sched = simulate(low.hops, channels, issue,
                              max_rounds=MAX_ROUNDS)
             assert bool(sched.converged), f"fanout={fanout} did not converge"
+            rounds[fanout] = int(sched.rounds)
             t_req = low.miss.shape[0]
             snooped = low.miss & (np.asarray(ev.bisnp_mask) > 0)
             lat[fanout] = float(np.mean(
@@ -303,6 +314,7 @@ def run_fanout_sweep(owner_counts=(1, 2, 3, 4), n: int = 600,
             "chain_ns": lat["chain"] / 1e3,
             "conc_ns": lat["concurrent"] / 1e3,
             "div_ns": (lat["chain"] - lat["concurrent"]) / 1e3,
+            "engine_rounds": rounds,
         })
     return out
 
@@ -346,6 +358,7 @@ def run(quick: bool = False) -> list[Row]:
             f"cpl_lat={f['cpl_miss_lat_ns']:.0f}ns;"
             f"bisnp_meas={f['bisnp_meas_ns']:.0f}ns;"
             f"bisnp_model={f['bisnp_model_ns']:.0f}ns",
+            meta=r["policies"].get("_meta"),
         ))
     top = sweep[-1]["policies"]
     order = ";".join(f"{p}={top[p]['cpl_miss_lat_ns']:.0f}" for p in policies)
@@ -370,6 +383,8 @@ def run(quick: bool = False) -> list[Row]:
             f"coherence_fabric/fanout_owners{r['owners']}", t.us,
             f"chain={r['chain_ns']:.0f}ns;conc={r['conc_ns']:.0f}ns;"
             f"div={r['div_ns']:.0f}ns;snooped={r['mean_snooped']:.2f}",
+            meta={"engine_rounds": r["engine_rounds"],
+                  "engine_converged": True},
         ))
     fgate = fanout_gate(fsweep)
     rows.append(Row(
@@ -391,5 +406,6 @@ def run(quick: bool = False) -> list[Row]:
             f"iso_lat={f['iso_miss_lat_ns']:.0f}ns;"
             f"cpl_lat={f['cpl_miss_lat_ns']:.0f}ns;"
             f"lifo_cpl={res['lifo']['cpl_miss_lat_ns']:.0f}ns",
+            meta=res.get("_meta"),
         ))
     return rows

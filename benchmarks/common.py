@@ -17,6 +17,10 @@ class Row:
     name: str
     us_per_call: float
     derived: str
+    # structured telemetry riding along in --json snapshots (convergence
+    # counters — Schedule.rounds/converged, coupled-fixpoint iterations —
+    # quantiles, utilizations); never printed in the CSV line
+    meta: dict | None = None
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"

@@ -33,6 +33,7 @@ MODULES = (
     ("link_layer", "benchmarks.bench_link_layer"),
     ("link_reliability", "benchmarks.bench_link_reliability"),
     ("coherence_fabric", "benchmarks.bench_coherence_fabric"),
+    ("telemetry", "benchmarks.bench_telemetry"),
     ("traces", "benchmarks.bench_traces"),
     ("coherence_modes", "benchmarks.bench_coherence_modes"),
     ("fabric", "benchmarks.bench_fabric"),
@@ -84,8 +85,11 @@ def main() -> None:
         for r in rows:
             print(r.csv())
             sys.stdout.flush()
-            results.append({"name": r.name, "us_per_call": r.us_per_call,
-                            "derived": r.derived})
+            row = {"name": r.name, "us_per_call": r.us_per_call,
+                   "derived": r.derived}
+            if getattr(r, "meta", None):
+                row["meta"] = r.meta   # convergence/telemetry counters
+            results.append(row)
     wall_s = time.time() - t0
     print(f"total_wall_s,{wall_s:.1f},")
     if args.json:

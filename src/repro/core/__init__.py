@@ -38,6 +38,16 @@ from .coherence_traffic import (  # noqa: E402,F401
     coherence_issue, lower_coherence, pad_rows, simulate_coupled,
 )
 from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
+from . import telemetry, trace_export  # noqa: E402,F401
+from .telemetry import (  # noqa: E402,F401
+    LatencyAttribution, ChannelTelemetry, WindowedSeries, QuantileSketch,
+    SFTelemetry, attribute_latency, conservation_residual, channel_telemetry,
+    windowed_series, sketch_new, sketch_update, sketch_merge,
+    sketch_quantile, sketch_quantiles, sf_telemetry, fabric_metrics,
+)
+from .trace_export import (  # noqa: E402,F401
+    channel_names, schedule_trace, coupled_trace, validate_trace, write_trace,
+)
 from . import fabric_model, autotune, vcs  # noqa: E402,F401
 from .fabric_model import TPUFabric, predict_collective  # noqa: E402,F401
 from .autotune import WorkloadDims, Layout, autotune as autotune_layouts  # noqa: E402,F401

@@ -152,6 +152,12 @@ class CoupledResult(NamedTuple):
     converged: bool
     used_oracle: bool
     damped: int = 0              # averaged (damped) updates applied
+    residual_ps: "np.ndarray | None" = None  # per-iteration max |Δfabric_lat|
+    # engine-level view of the final pass (coherence rows first, then any
+    # background rows) — what `schedule` actually scheduled; feed these to
+    # `core.telemetry` / `core.trace_export`:
+    fabric_hops: "Hops | None" = None
+    fabric_issue_ps: "jnp.ndarray | None" = None
 
 
 def _route_chans(graph: FabricGraph, src: int, dst: int):
@@ -628,6 +634,7 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
     iters = 0
     converged = False
     damped = 0
+    resid_hist = []           # convergence telemetry: max |Δ| per iteration
     for iters in range(1, max_iters + 1):
         if fab is not None:
             res, ev = simulate_sf(addr_j, wr_j, rid_j, sf_cfg, cache_cfg,
@@ -638,10 +645,13 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
                                            max_rounds=max_rounds)
         new_fab = jnp.where(miss, sched.complete[:T] - issue_all[:T],
                             jnp.int64(0))
-        if fab is not None and int(jnp.max(jnp.abs(new_fab - fab))) <= tol_ps:
-            fab = new_fab
-            converged = True
-            break
+        if fab is not None:
+            resid = int(jnp.max(jnp.abs(new_fab - fab)))
+            resid_hist.append(resid)
+            if resid <= tol_ps:
+                fab = new_fab
+                converged = True
+                break
         if damping and fab is not None:
             fab = (fab + new_fab) // 2      # averaged (damped) update
             damped += 1
@@ -666,4 +676,6 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
         bisnp_lat_ps=bisnp_latencies(sched, low),
         issue_ps=ev.fab_issue_ps, iters=iters, converged=converged,
         used_oracle=used_oracle, damped=damped,
+        residual_ps=np.asarray(resid_hist, dtype=np.int64),
+        fabric_hops=hops_all, fabric_issue_ps=issue_all,
     )

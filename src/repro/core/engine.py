@@ -164,8 +164,16 @@ class Schedule(NamedTuple):
     converged: jnp.ndarray  # () bool
 
 
-def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
-    """One sort→segmented-scan→propagate pass.  arrive: (N, H+1)."""
+def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False):
+    """One sort→segmented-scan→propagate pass.  arrive: (N, H+1).
+
+    ``with_stalls=True`` (telemetry replay, `core.telemetry`) additionally
+    returns the per-item retraining-stall share of the queueing wait —
+    ``start − max(arrive, contention floor)``, the part of the grant delay
+    attributable to the channel's link-down interval alone.  The default
+    path is byte-identical to the plain round (the extra outputs exist only
+    under the flag, which is resolved at trace time).
+    """
     n, h = hops.channel.shape
     k = n * h
     flat_arrive = arrive[:, :h].reshape(k)
@@ -178,6 +186,7 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
     order = jnp.argsort(flat_arrive, stable=True)
     order = order[jnp.argsort(sort_chan[order], stable=True)]
 
+    chan_clipped = jnp.minimum(flat_chan[order], ch.bw_MBps.shape[0] - 1)
     s_chan = flat_chan[order]
     s_valid = flat_valid[order]
     s_arrive = flat_arrive[order]
@@ -186,11 +195,10 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
     s_bytes = hops.nbytes.reshape(k)[order]
     s_extra = (hops.extra_wire_bytes.reshape(k)[order]
                if hops.extra_wire_bytes is not None else None)
-    s_ser = wire_ser_ps(s_bytes, ch, jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1),
-                        extra_wire=s_extra)
-    s_turn = ch.turnaround_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
-    s_rowhit = ch.row_hit_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
-    s_rowmiss = ch.row_miss_ps[jnp.minimum(s_chan, ch.bw_MBps.shape[0] - 1)]
+    s_ser = wire_ser_ps(s_bytes, ch, chan_clipped, extra_wire=s_extra)
+    s_turn = ch.turnaround_ps[chan_clipped]
+    s_rowhit = ch.row_hit_ps[chan_clipped]
+    s_rowmiss = ch.row_miss_ps[chan_clipped]
     # stochastic retraining stalls extend the carry with per-channel
     # down-until state — resolved at trace time so the deterministic layout
     # compiles to the exact PR-1 scan
@@ -224,8 +232,15 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
             # a retraining link grants nothing until down_until passes; the
             # state is per channel, i.e. per scan segment — reset on entry
             seg_down = jnp.where(same, prev_down, jnp.int64(0))
+            if with_stalls:
+                # grant time the item would have seen on a healthy link —
+                # the retrain stall is whatever the down interval adds on top
+                nodown = jnp.where(same, jnp.maximum(arr, floor), arr)
             floor = jnp.maximum(floor, seg_down)
         start = jnp.where(same, jnp.maximum(arr, floor), arr)
+        if with_stalls:
+            stall = (jnp.where(valid, start - nodown, 0) if has_retrain
+                     else jnp.zeros_like(start))
         row_managed = row >= 0
         row_extra = jnp.where(
             row_managed,
@@ -235,6 +250,7 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
         depart = start + ser + row_extra
         start = jnp.where(valid, start, arr)
         depart = jnp.where(valid, depart, arr)
+        ys = (start, depart) + ((stall,) if with_stalls else ())
         if not has_retrain:
             new_carry = (
                 jnp.where(valid, chan, prev_chan),
@@ -242,7 +258,7 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
                 jnp.where(valid, drn, prev_dir),
                 jnp.where(valid & (row >= 0), row, prev_row),
             )
-            return new_carry, (start, depart)
+            return new_carry, ys
         # a marker opening a segment initializes the channel state to "no
         # previous item" (depart 0, row -2) so the next real hop sees a
         # fresh channel plus the marker's down interval; mid-segment it
@@ -263,12 +279,13 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
                                 jnp.int64(0)))
         new_carry = new_carry + (
             jnp.where(valid | marker, new_down, prev_down),)
-        return new_carry, (start, depart)
+        return new_carry, ys
 
     init = (jnp.int32(-1), jnp.int64(0), jnp.int8(-1), jnp.int32(-2))
     if has_retrain:
         init = init + (jnp.int64(0),)
-    _, (s_start, s_depart) = jax.lax.scan(scan_fn, init, xs)
+    _, out = jax.lax.scan(scan_fn, init, xs)
+    s_start, s_depart = out[0], out[1]
 
     start = jnp.zeros(k, dtype=jnp.int64).at[order].set(s_start).reshape(n, h)
     depart = jnp.zeros(k, dtype=jnp.int64).at[order].set(s_depart).reshape(n, h)
@@ -280,6 +297,10 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive):
             hops.valid[:, j], depart[:, j] + hops.fixed_after_ps[:, j], cols[-1]
         ))
     new_arrive = jnp.stack(cols, axis=1)
+    if with_stalls:
+        stall = jnp.zeros(k, dtype=jnp.int64).at[order].set(
+            out[2]).reshape(n, h)
+        return new_arrive, start, depart, stall
     return new_arrive, start, depart
 
 
@@ -353,6 +374,23 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
         arrive=arrive, start=start, depart=depart,
         complete=arrive[:, h], rounds=i, converged=~changed,
     )
+
+
+def replay_round(hops: Hops, channels: Channels, sched: Schedule):
+    """Re-run one FCFS round from a resolved schedule (telemetry replay).
+
+    The exact schedule is a fixed point of the round map, so replaying one
+    sort→scan pass from ``sched.arrive`` reproduces ``start``/``depart``
+    bit-for-bit — and on the way extracts the per-hop **retraining-stall**
+    share of each grant delay (the only latency component the final
+    schedule arrays alone cannot separate from ordinary queueing).  Returns
+    ``(start, depart, retrain_stall)``, each ``(N, H)``; the stall table is
+    all zeros for deterministic-reliability layouts.  Pure observer: the
+    schedule is an input, never recomputed.
+    """
+    _, start, depart, stall = _one_round(
+        hops, channels, sched.arrive[:, 0], sched.arrive, with_stalls=True)
+    return start, depart, stall
 
 
 # ---------------------------------------------------------------------------

@@ -47,7 +47,23 @@ import heapq
 
 import numpy as np
 
-from .engine import Channels, Hops
+from .engine import Channels, Hops, Schedule
+
+
+def ref_schedule(ref: dict) -> Schedule:
+    """Wrap a `simulate_ref` result dict as a `Schedule` so every
+    post-schedule reduction (`channel_stats`, `core.telemetry`) runs
+    unchanged against the oracle — the metric-equality cross-check."""
+    import jax.numpy as jnp
+
+    return Schedule(
+        arrive=jnp.asarray(ref["arrive"]),
+        start=jnp.asarray(ref["start"]),
+        depart=jnp.asarray(ref["depart"]),
+        complete=jnp.asarray(ref["complete"]),
+        rounds=jnp.int32(0),
+        converged=jnp.bool_(True),
+    )
 
 
 def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:

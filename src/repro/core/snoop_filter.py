@@ -128,6 +128,16 @@ class SFResult(NamedTuple):
     final_cache_tag: jnp.ndarray  # (R, Cc)
 
 
+def owner_count(mask: jnp.ndarray) -> jnp.ndarray:
+    """Popcount of requester bitmasks (`SFEvents.bisnp_mask`) — the BISnp
+    fan-out of each request.  Branch-free SWAR on uint32; jit/vmap-safe."""
+    v = jnp.asarray(mask).astype(jnp.uint32)
+    v = v - ((v >> 1) & 0x55555555)
+    v = (v & 0x33333333) + ((v >> 2) & 0x33333333)
+    v = (v + (v >> 4)) & 0x0F0F0F0F
+    return ((v * 0x01010101) >> 24).astype(jnp.int32)
+
+
 def _victim_scores(policy: str, sf_tag, sf_ins, sf_acc, lfi_count, runlen):
     """Lower score = better victim.  Invalid entries are excluded by caller."""
     if policy == "fifo":

@@ -1,0 +1,477 @@
+"""Telemetry layer: conservation invariant, oracle metric equality,
+pure-observer bit-exactness, streaming quantile sketches, trace export.
+
+The load-bearing properties:
+
+  * **conservation** — `attribute_latency` components sum *exactly* to
+    ``complete − issue`` per request, across flit-mode × reliability ×
+    join configs (property test via the optional-hypothesis shim);
+  * **oracle equality** — every metric reduction computed from the
+    engine's schedule equals the same reduction computed from the
+    event-driven `ref_des` oracle's schedule;
+  * **pure observer** — running telemetry cannot perturb a schedule
+    (re-simulating after a full telemetry pass is bit-identical), and
+    `replay_round` reproduces the fixpoint schedule bit-for-bit;
+  * **jit/vmap** — the reductions run inside one jit, vmapped across a
+    BER sweep of stacked hop tables;
+  * **sketch** — quantile estimates stay within the bucket resolution of
+    exact sample quantiles; merge == concatenation; chunked streaming ==
+    one batch;
+  * **trace** — exported Chrome-trace JSON passes the schema gate, and
+    corrupted traces are rejected.
+"""
+
+import json
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st  # optional-hypothesis shim
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  (x64)
+from repro.core import topology as T
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import (Channels, Hops, channel_stats, make_channels,
+                               replay_round, simulate)
+from repro.core.link_layer import FlitConfig
+from repro.core.ref_des import ref_schedule, simulate_ref
+from repro.core.snoop_filter import (CacheConfig, SFConfig,
+                                     make_skewed_stream, owner_count,
+                                     simulate_sf)
+from repro.core.coherence_traffic import (CoherenceFabricSpec,
+                                          coherence_issue, simulate_coupled)
+from repro.core import telemetry as tm
+from repro.core import trace_export as tx
+
+BUS_BW = 128_000
+
+# flit-mode × reliability axis of the conservation property
+FLIT_CONFIGS = {
+    "byte": None,                              # byte-exact links
+    "flit": FlitConfig("flit256"),             # flit quantization, expected
+    "replay": FlitConfig("flit256", ber=1e-4),  # + expected CRC replay
+    "stochastic": FlitConfig("flit256", ber=3e-4, reliability="stochastic",
+                             rel_seed=7, retrain_threshold=2,
+                             retrain_ps=500_000),  # sampled replay+retrain
+}
+
+
+def _bus_wl(flit, n=60, seed=3):
+    topo = T.with_flit(T.single_bus(n_mems=4, bw_MBps=BUS_BW), flit)
+    spec = RequesterSpec(node=0, n_requests=n, targets=[2, 3, 4, 5],
+                         read_ratio=0.5, issue_interval_ps=300,
+                         payload_bytes=944, seed=seed)
+    return build_workload(topo.build(), [spec], warmup_frac=0.0)
+
+
+def _join_case(seed, n=24, h=3, c=3):
+    """Random hop table + a one-layer join DAG (like test_engine's)."""
+    rng = np.random.default_rng(seed)
+    ch = Channels(jnp.asarray(rng.integers(10, 100, c).astype(np.int64) * 1000),
+                  jnp.asarray(np.where(rng.random(c) < .4,
+                                       rng.integers(100, 4000, c),
+                                       0).astype(np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)),
+                  jnp.asarray(np.zeros(c, np.int64)))
+    chan = rng.integers(0, c, (n, h)).astype(np.int32)
+    nbytes = np.where(rng.random((n, h)) < 0.15, 0,
+                      rng.integers(1, 400, (n, h))).astype(np.int64)
+    valid = rng.random((n, h)) < .85
+    jid = np.full(n, -1, np.int32)
+    jwait = np.full(n, -1, np.int32)
+    jarity = np.zeros(n, np.int32)
+    half = n // 2
+    members = np.arange(half)[rng.random(half) < 0.6]
+    if members.size == 0:
+        members = np.array([0])
+    jid[members] = 0
+    jwait[half] = 0
+    jarity[half] = members.size
+    hops = Hops(jnp.asarray(chan), jnp.asarray(nbytes),
+                jnp.asarray(rng.integers(0, 2, (n, h)).astype(np.int8)),
+                jnp.asarray(np.full((n, h), -1, np.int32)),
+                jnp.asarray(rng.integers(0, 2000, (n, h)).astype(np.int64)),
+                jnp.asarray(valid), jnp.asarray(valid),
+                join_id=jnp.asarray(jid), join_wait=jnp.asarray(jwait),
+                join_arity=jnp.asarray(jarity))
+    issue = jnp.asarray(np.sort(rng.integers(0, 5000, n)).astype(np.int64))
+    return hops, ch, issue
+
+
+def _star_coupled(seed=4, n=200, n_req=2):
+    kinds = [T.SWITCH] + [T.REQUESTER] * n_req + [T.MEMORY]
+    links = [T.LinkSpec(i, 0, 64_000, 26_000) for i in range(1, len(kinds))]
+    graph = T.Topology(np.asarray(kinds, np.int64), links,
+                       name="star").build()
+    spec = CoherenceFabricSpec(dev_node=n_req + 1,
+                               req_nodes=tuple(range(1, n_req + 1)))
+    addr, wr, rid = make_skewed_stream(n, 256, write_ratio=0.3,
+                                       n_requesters=n_req, seed=seed)
+    res = simulate_coupled(addr, wr, rid,
+                           SFConfig(capacity=32, footprint_lines=256),
+                           CacheConfig(capacity=32), graph, spec,
+                           n_requesters=n_req, max_iters=8)
+    return res, graph
+
+
+def _assert_conserved(hops, ch, sched, issue):
+    att = tm.attribute_latency(hops, ch, sched, issue)
+    resid = tm.conservation_residual(att)
+    assert int(jnp.max(jnp.abs(resid))) == 0
+    for f in ("join_wait_ps", "queue_wait_ps", "retrain_stall_ps",
+              "wire_ps", "row_extra_ps", "fixed_ps"):
+        assert int(jnp.min(getattr(att, f))) >= 0, f
+    return att
+
+
+# ---------------------------------------------------------------------------
+# conservation invariant (the tentpole's hard property)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.sampled_from(sorted(FLIT_CONFIGS)))
+@settings(max_examples=12, deadline=None)
+def test_conservation_flit_reliability(seed, mode):
+    wl = _bus_wl(FLIT_CONFIGS[mode], n=40, seed=seed % 97)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    assert bool(sched.converged)
+    att = _assert_conserved(wl.hops, wl.channels, sched, wl.issue_ps)
+    if mode == "stochastic":
+        assert wl.hops.retrain_after_ps is not None
+    else:
+        assert int(jnp.sum(att.retrain_stall_ps)) == 0
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_conservation_joins(seed):
+    hops, ch, issue = _join_case(seed)
+    sched = simulate(hops, ch, issue, max_rounds=400)
+    assert bool(sched.converged)
+    att = _assert_conserved(hops, ch, sched, issue)
+    # the waiter really attributes its release stall to join_wait
+    assert int(att.join_wait_ps[hops.channel.shape[0] // 2]) >= 0
+
+
+def test_conservation_coupled_coherence():
+    res, graph = _star_coupled()
+    ch = make_channels(graph)
+    issue = coherence_issue(res.lowering, res.events.fab_issue_ps)
+    att = _assert_conserved(res.lowering.hops, ch, res.schedule, issue)
+    assert int(jnp.sum(att.join_wait_ps)) > 0   # BISnp joins stall requests
+
+
+# ---------------------------------------------------------------------------
+# oracle metric equality + pure observer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", sorted(FLIT_CONFIGS))
+def test_metrics_equal_engine_vs_oracle(mode):
+    wl = _bus_wl(FLIT_CONFIGS[mode], n=50)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    ref = ref_schedule(simulate_ref(wl.hops, wl.channels, wl.issue_ps))
+    a = tm.attribute_latency(wl.hops, wl.channels, sched, wl.issue_ps)
+    b = tm.attribute_latency(wl.hops, wl.channels, ref, wl.issue_ps)
+    for f in a._fields:
+        assert bool(jnp.all(getattr(a, f) == getattr(b, f))), f
+    ca = tm.channel_telemetry(wl.hops, wl.channels, sched)
+    cb = tm.channel_telemetry(wl.hops, wl.channels, ref)
+    for f in ca._fields:
+        assert bool(jnp.all(getattr(ca, f) == getattr(cb, f))), f
+    wa = tm.windowed_series(wl.hops, wl.channels, sched, wl.issue_ps, n_bins=16)
+    wb = tm.windowed_series(wl.hops, wl.channels, ref, wl.issue_ps, n_bins=16)
+    for f in ("busy_ps", "completions"):
+        assert bool(jnp.all(getattr(wa, f) == getattr(wb, f))), f
+
+
+def test_telemetry_is_pure_observer():
+    """Schedules are bit-exact with metrics on vs. off."""
+    wl = _bus_wl(FLIT_CONFIGS["stochastic"], n=50)
+    before = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    snap = {f: np.asarray(getattr(before, f)).copy() for f in before._fields}
+    tm.fabric_metrics(wl.hops, wl.channels, before, wl.issue_ps)
+    tx.schedule_trace(wl.hops, wl.channels, before)
+    after = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    for f in before._fields:
+        assert np.array_equal(snap[f], np.asarray(getattr(after, f))), f
+
+
+def test_replay_round_reproduces_fixpoint():
+    """One replayed round from the converged schedule is bit-identical —
+    the property the retraining-stall extraction rests on."""
+    for mode in ("byte", "stochastic"):
+        wl = _bus_wl(FLIT_CONFIGS[mode], n=50)
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+        start, depart, stall = replay_round(wl.hops, wl.channels, sched)
+        assert np.array_equal(np.asarray(start), np.asarray(sched.start))
+        assert np.array_equal(np.asarray(depart), np.asarray(sched.depart))
+        if mode == "byte":
+            assert int(jnp.sum(stall)) == 0
+
+
+# ---------------------------------------------------------------------------
+# jit + vmap across a BER sweep
+# ---------------------------------------------------------------------------
+
+def test_metrics_jit_vmap_ber_sweep():
+    wls = [_bus_wl(FlitConfig("flit256", ber=b, reliability="stochastic",
+                              rel_seed=7, retrain_threshold=2,
+                              retrain_ps=500_000), n=40)
+           for b in (1e-5, 3e-4)]
+    h_max = max(w.hops.channel.shape[1] for w in wls)
+    fills = dict(channel=-1, nbytes=0, direction=0, row=-1, fixed_after_ps=0,
+                 is_payload=False, valid=False, extra_wire_bytes=0,
+                 retrain_after_ps=0)
+
+    def pad(h):
+        return h._replace(**{
+            f: jnp.asarray(np.pad(
+                np.asarray(getattr(h, f)),
+                ((0, 0), (0, h_max - getattr(h, f).shape[1])),
+                constant_values=v))
+            for f, v in fills.items()})
+
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *[pad(w.hops) for w in wls])
+    ch, issue = wls[0].channels, wls[0].issue_ps
+
+    @jax.jit
+    def sweep(hops):
+        sched = jax.vmap(lambda h: simulate(h, ch, issue,
+                                            max_rounds=200))(hops)
+        att = jax.vmap(lambda h, s: tm.attribute_latency(h, ch, s,
+                                                         issue))(hops, sched)
+        chans = jax.vmap(lambda h, s: tm.channel_telemetry(h, ch,
+                                                           s))(hops, sched)
+        sk = jax.vmap(lambda t: tm.sketch_update(tm.sketch_new(),
+                                                 t))(att.total_ps)
+        return sched, att, chans, jax.vmap(tm.sketch_quantiles)(sk)
+
+    sched, att, chans, q = sweep(stacked)
+    assert bool(sched.converged.all())
+    assert int(jnp.max(jnp.abs(tm.conservation_residual(att)))) == 0
+    # more bit errors -> strictly more retraining stall at these BERs
+    stalls = np.asarray(jnp.sum(att.retrain_stall_ps, axis=1))
+    assert stalls[1] > stalls[0]
+    assert q.shape == (2, 3) and bool((q[:, 0] <= q[:, 2]).all())
+    # vmapped rows equal the per-workload scalar path
+    solo = simulate(wls[0].hops, ch, issue, max_rounds=200)
+    att0 = tm.attribute_latency(wls[0].hops, ch, solo, issue)
+    assert np.array_equal(np.asarray(att.total_ps[0]),
+                          np.asarray(att0.total_ps))
+
+
+# ---------------------------------------------------------------------------
+# channel counters + windowed series
+# ---------------------------------------------------------------------------
+
+def test_channel_telemetry_matches_channel_stats():
+    wl = _bus_wl(FLIT_CONFIGS["flit"], n=60)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    ct = tm.channel_telemetry(wl.hops, wl.channels, sched)
+    cs = channel_stats(wl.hops, sched, wl.channels)
+    assert np.array_equal(np.asarray(ct.busy_ps), np.asarray(cs["busy_ps"]))
+    assert np.array_equal(np.asarray(ct.wait_ps), np.asarray(cs["wait_ps"]))
+    # payload bytes: every measured request moved its logical bytes
+    assert int(jnp.sum(ct.payload_bytes)) == int(
+        jnp.sum(jnp.where(wl.hops.is_payload, wl.hops.nbytes, 0)))
+    # flit quantization means wire bytes strictly exceed payload bytes
+    assert int(jnp.sum(ct.wire_bytes)) > int(jnp.sum(ct.payload_bytes))
+
+
+def test_peak_backlog_hand_case():
+    """3 requests arrive at t=0 on one channel (ser 100k ps each): backlog
+    peaks at 3, drains by one at each grant."""
+    ch = Channels(jnp.asarray([1000], dtype=jnp.int64),
+                  jnp.zeros(1, jnp.int64), jnp.zeros(1, jnp.int64),
+                  jnp.zeros(1, jnp.int64))
+    n = 3
+    hops = Hops(jnp.zeros((n, 1), jnp.int32),
+                jnp.full((n, 1), 100, jnp.int64),
+                jnp.zeros((n, 1), jnp.int8),
+                jnp.full((n, 1), -1, jnp.int32),
+                jnp.zeros((n, 1), jnp.int64),
+                jnp.ones((n, 1), bool), jnp.ones((n, 1), bool))
+    issue = jnp.zeros(n, jnp.int64)
+    sched = simulate(hops, ch, issue)
+    ct = tm.channel_telemetry(hops, ch, sched)
+    assert int(ct.peak_backlog[0]) == 3
+    assert int(ct.busy_ps[0]) == 3 * 100_000
+    # staggered arrivals past each grant never queue
+    issue2 = jnp.asarray([0, 100_000, 200_000], jnp.int64)
+    ct2 = tm.channel_telemetry(hops, ch, simulate(hops, ch, issue2))
+    assert int(ct2.peak_backlog[0]) == 1
+    assert int(ct2.wait_ps[0]) == 0
+
+
+def test_windowed_series_sums_to_totals():
+    wl = _bus_wl(FLIT_CONFIGS["replay"], n=60)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    ws = tm.windowed_series(wl.hops, wl.channels, sched, wl.issue_ps,
+                            n_bins=16)
+    ct = tm.channel_telemetry(wl.hops, wl.channels, sched)
+    # exact split: binned occupancy sums back to the channel totals
+    assert int(jnp.sum(ws.busy_ps)) == int(jnp.sum(ct.busy_ps))
+    assert int(jnp.sum(ws.completions)) == int(sched.complete.shape[0])
+    # integral of in-flight == total latency mass
+    total_lat = int(jnp.sum(sched.complete - wl.issue_ps))
+    assert int(jnp.sum(ws.inflight * ws.bin_ps)) == total_lat
+
+
+# ---------------------------------------------------------------------------
+# quantile sketch
+# ---------------------------------------------------------------------------
+
+def test_sketch_binning_roundtrip_small_values_exact():
+    v = jnp.arange(0, 32, dtype=jnp.int64)
+    assert np.array_equal(np.asarray(tm.sketch_bin(v)), np.arange(32))
+    assert np.array_equal(np.asarray(tm.sketch_value(tm.sketch_bin(v))),
+                          np.asarray(v))
+
+
+def test_sketch_quantiles_within_resolution():
+    rng = np.random.default_rng(11)
+    vals = np.concatenate([
+        rng.integers(1, 100, 4000),
+        (rng.lognormal(13, 1.5, 6000)).astype(np.int64),
+    ]).astype(np.int64)
+    sk = tm.sketch_update(tm.sketch_new(), jnp.asarray(vals))
+    assert int(sk.n) == vals.size
+    for q in (0.01, 0.25, 0.5, 0.9, 0.99, 0.999):
+        est = int(tm.sketch_quantile(sk, q))
+        exact = int(np.quantile(vals, q, method="inverted_cdf"))
+        assert abs(est - exact) <= max(exact * 2 * tm.SKETCH_REL_ERROR, 1), q
+    # extremes are exact (clamped to observed min/max)
+    assert int(tm.sketch_quantile(sk, 0.0)) == int(vals.min())
+    assert int(tm.sketch_quantile(sk, 1.0)) == int(vals.max())
+
+
+def test_sketch_merge_equals_concat_and_streams():
+    rng = np.random.default_rng(5)
+    a = rng.integers(1, 10**9, 3000).astype(np.int64)
+    b = (rng.lognormal(10, 2, 2000)).astype(np.int64)
+    one = tm.sketch_update(tm.sketch_new(),
+                           jnp.asarray(np.concatenate([a, b])))
+    merged = tm.sketch_merge(tm.sketch_update(tm.sketch_new(), jnp.asarray(a)),
+                             tm.sketch_update(tm.sketch_new(), jnp.asarray(b)))
+    for f in one._fields:
+        assert np.array_equal(np.asarray(getattr(one, f)),
+                              np.asarray(getattr(merged, f))), f
+    # chunked streaming (the windowed-engine pattern) == one batch
+    chunks = tm.sketch_new()
+    for part in np.array_split(np.concatenate([a, b]), 7):
+        chunks = tm.sketch_update(chunks, jnp.asarray(part))
+    assert np.array_equal(np.asarray(chunks.counts), np.asarray(one.counts))
+    # masked update skips masked-out values
+    masked = tm.sketch_update(tm.sketch_new(), jnp.asarray(a),
+                              mask=jnp.zeros(a.size, bool))
+    assert int(masked.n) == 0
+    assert int(tm.sketch_quantile(masked, 0.5)) == 0
+
+
+def test_fabric_metrics_check_catches_corruption():
+    wl = _bus_wl(None, n=30)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
+    tm.fabric_metrics(wl.hops, wl.channels, sched, wl.issue_ps)  # clean: ok
+    bad = sched._replace(complete=sched.complete + 1)
+    with pytest.raises(AssertionError, match="conservation"):
+        tm.fabric_metrics(wl.hops, wl.channels, bad, wl.issue_ps)
+
+
+# ---------------------------------------------------------------------------
+# SF protocol counters
+# ---------------------------------------------------------------------------
+
+def test_owner_count_popcount():
+    masks = jnp.asarray([0b0, 0b1, 0b101, 0b1111, (1 << 31) | 1], jnp.int64)
+    assert np.array_equal(np.asarray(owner_count(masks)), [0, 1, 2, 4, 2])
+
+
+def test_sf_telemetry_counters():
+    addr, wr, rid = make_skewed_stream(300, 256, write_ratio=0.3,
+                                       n_requesters=2, seed=4)
+    _, ev = simulate_sf(addr, wr, rid,
+                        SFConfig(capacity=32, footprint_lines=256),
+                        CacheConfig(capacity=32), n_requesters=2,
+                        return_events=True)
+    sft = tm.sf_telemetry(ev, n_requesters=2)
+    t = int(ev.cache_hit.shape[0])
+    assert int(jnp.sum(sft.fanout_hist)) == t
+    assert float(sft.hit_rate) == pytest.approx(
+        float(jnp.mean(ev.cache_hit.astype(jnp.float64))))
+    assert int(sft.bisnp_legs) == int(jnp.sum(owner_count(ev.bisnp_mask)))
+    assert int(sft.invblk_lines) == int(jnp.sum(ev.inv_lines))
+    assert int(sft.wb_lines) == int(jnp.sum(ev.wb_lines))
+
+
+# ---------------------------------------------------------------------------
+# coupled convergence telemetry
+# ---------------------------------------------------------------------------
+
+def test_coupled_residual_history():
+    res, graph = _star_coupled()
+    assert res.converged
+    hist = np.asarray(res.residual_ps)
+    assert hist.ndim == 1 and hist.size == res.iters - 1
+    assert hist[-1] == 0                      # tol 0: exact fixpoint
+    assert res.fabric_hops is not None
+    assert res.fabric_issue_ps.shape[0] == res.schedule.complete.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# trace export + schema gate
+# ---------------------------------------------------------------------------
+
+def _trace_for(mode):
+    wl = _bus_wl(FLIT_CONFIGS[mode], n=40)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    return tx.schedule_trace(wl.hops, wl.channels, sched)
+
+
+def test_trace_schema_valid():
+    tr = _trace_for("flit")
+    assert tx.validate_trace(tr) == []
+    assert tx.validate_trace(json.dumps(tr)) == []   # round-trips as JSON
+    phs = {e["ph"] for e in tr["traceEvents"]}
+    assert {"M", "B", "E", "C"} <= phs
+
+
+def test_trace_retrain_tracks():
+    tr = _trace_for("stochastic")
+    assert tx.validate_trace(tr) == []
+    names = [e["name"] for e in tr["traceEvents"] if e["ph"] == "B"]
+    assert "retraining" in names
+    assert any(e["ph"] == "i" and e["name"] == "retrain"
+               for e in tr["traceEvents"])
+
+
+def test_coupled_trace_residual_counters():
+    res, graph = _star_coupled()
+    tr = tx.coupled_trace(res, graph)
+    assert tx.validate_trace(tr) == []
+    resids = [e for e in tr["traceEvents"]
+              if e["ph"] == "C" and e["name"] == "coupled residual"]
+    assert len(resids) == res.iters - 1
+    names = tx.channel_names(graph)
+    assert len(names) == graph.n_channels and all(names)
+
+
+def test_trace_validator_rejects_corruption():
+    tr = _trace_for("byte")
+    evs = tr["traceEvents"]
+    # unmatched E: drop the last B's partner
+    i_b = max(i for i, e in enumerate(evs) if e["ph"] == "B")
+    broken = {"traceEvents": evs[:i_b] + evs[i_b + 1:]}
+    assert any("unclosed" in v or "without matching" in v
+               for v in tx.validate_trace(broken))
+    # non-monotone ts
+    shuffled = {"traceEvents": list(reversed(evs))}
+    assert any("<" in v for v in tx.validate_trace(shuffled))
+    # structurally invalid inputs
+    assert tx.validate_trace("not json {")[0].startswith("invalid JSON")
+    assert tx.validate_trace({"foo": 1}) == ["missing traceEvents object"]
+    assert tx.validate_trace({"traceEvents": [{"nope": 1}]})
+    bad_ts = {"traceEvents": [{"ph": "B", "pid": 0, "tid": 0, "ts": -5,
+                               "name": "x"}]}
+    assert any("bad ts" in v for v in tx.validate_trace(bad_ts))
