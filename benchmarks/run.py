@@ -34,6 +34,7 @@ MODULES = (
     ("link_reliability", "benchmarks.bench_link_reliability"),
     ("coherence_fabric", "benchmarks.bench_coherence_fabric"),
     ("telemetry", "benchmarks.bench_telemetry"),
+    ("streaming", "benchmarks.bench_streaming"),
     ("traces", "benchmarks.bench_traces"),
     ("coherence_modes", "benchmarks.bench_coherence_modes"),
     ("fabric", "benchmarks.bench_fabric"),

@@ -23,19 +23,27 @@ from .link_layer import (  # noqa: E402,F401
     credit_limited_MBps,
 )
 from .engine import (  # noqa: E402,F401
-    Channels, Hops, Schedule, simulate, simulate_auto, channel_stats, request_stats,
-    make_channels, ser_ps,
+    Channels, Hops, Schedule, StreamCarry, simulate, simulate_auto,
+    channel_stats, request_stats, make_channels, ser_ps, empty_carry,
 )
 from .devices import RequesterSpec, Workload, build_workload  # noqa: E402,F401
 from . import calibration, traces, routing, snoop_filter  # noqa: E402,F401
 from .snoop_filter import (  # noqa: E402,F401
-    SFConfig, CacheConfig, SFEvents, simulate_sf, POLICIES,
-    make_skewed_stream, make_sequential_stream,
+    SFConfig, CacheConfig, SFEvents, SFState, simulate_sf, sf_init_state,
+    POLICIES, make_skewed_stream, make_sequential_stream,
+)
+from .traces import (  # noqa: E402,F401
+    ARRIVAL_PATTERNS, WORKLOADS, arrival_times, request_stream, tenant_mix,
 )
 from . import coherence_traffic  # noqa: E402,F401
 from .coherence_traffic import (  # noqa: E402,F401
-    CoherenceFabricSpec, CoupledResult, FANOUT_MODES, bisnp_latencies,
-    coherence_issue, lower_coherence, pad_rows, simulate_coupled,
+    CoherenceFabricSpec, CoherenceStream, CoupledResult, FANOUT_MODES,
+    bisnp_latencies, coherence_issue, lower_coherence, pad_rows,
+    simulate_coupled,
+)
+from . import streaming  # noqa: E402,F401
+from .streaming import (  # noqa: E402,F401
+    StreamResult, StreamState, simulate_stream, stream_windows,
 )
 from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
 from . import telemetry, trace_export  # noqa: E402,F401
@@ -44,6 +52,8 @@ from .telemetry import (  # noqa: E402,F401
     SFTelemetry, attribute_latency, conservation_residual, channel_telemetry,
     windowed_series, sketch_new, sketch_update, sketch_merge,
     sketch_quantile, sketch_quantiles, sf_telemetry, fabric_metrics,
+    StreamTelemetry, stream_telemetry_new, stream_telemetry_fold,
+    stream_telemetry_finalize,
 )
 from .trace_export import (  # noqa: E402,F401
     channel_names, schedule_trace, coupled_trace, validate_trace, write_trace,

@@ -74,7 +74,8 @@ import numpy as np
 from . import link_layer
 from .devices import Workload, finish_hops, marker_column_map, packetize
 from .engine import Hops, Schedule, make_channels, simulate_auto
-from .snoop_filter import CacheConfig, SFConfig, SFEvents, SFResult, simulate_sf
+from .snoop_filter import (CacheConfig, SFConfig, SFEvents, SFResult,
+                           sf_init_state, simulate_sf)
 from .topology import SWITCH, FabricGraph
 
 FANOUT_MODES = ("concurrent", "chain")
@@ -679,3 +680,83 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
         residual_ps=np.asarray(resid_hist, dtype=np.int64),
         fabric_hops=hops_all, fabric_issue_ps=issue_all,
     )
+
+
+class CoherenceStream:
+    """Chunked ``(hops, issue_ps)`` source for `streaming.simulate_stream`
+    — the §V-E-scale front end of the §V-B/§V-C coherence machinery.
+
+    Iterates the request stream ``chunk`` requests at a time; each chunk
+    resumes the DCOH scan from the carried `SFState` (bit-exact with the
+    monolithic scan — protocol decisions depend only on request order),
+    lowers its event log onto the fabric (`lower_coherence`; join groups
+    are chunk-local by construction, exactly the streaming driver's chunk
+    contract) and yields ``(hops, issue_ps)`` ready for the windowed
+    engine.
+
+    One-pass (uncoupled) lowering: issue clocks come from the analytic SF
+    scan and fabric-measured latencies are *not* fed back — the
+    `simulate_coupled` fixpoint needs the whole trace's latencies at once,
+    so coupling the streamed path is follow-on work.  Chunk-min issue
+    monotonicity (the driver's stream contract) holds whenever every
+    requester appears in every chunk (round-robin interleaves do); the
+    driver asserts it regardless.
+
+    With ``fanout="chain"`` on a deterministic-reliability graph the
+    streamed schedule is bit-exact with lowering the whole trace at once
+    (row order and per-row hop order are both preserved, so every FCFS
+    tie-break agrees); with stochastic retrain sampling the chunked
+    lowering draws per-chunk sample streams — deterministic, but not
+    equal to the monolithic draw.
+
+    Attributes update as chunks are consumed: ``sf_state`` (the carried
+    protocol state; its counters are cumulative), ``n_done``, and — with
+    ``keep_results=True`` — ``sf_results`` (per-chunk `SFResult` list).
+    """
+
+    def __init__(self, addr, is_write, rid, sf_cfg: SFConfig,
+                 cache_cfg: CacheConfig, graph: FabricGraph,
+                 spec: CoherenceFabricSpec, *, chunk: int,
+                 n_requesters: int = 1, fanout: str = "chain",
+                 upgrade_bisnp: bool | None = None,
+                 init_state=None, keep_results: bool = False):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.addr = np.asarray(addr)
+        self.is_write = np.asarray(is_write)
+        self.rid = np.asarray(rid)
+        self.sf_cfg, self.cache_cfg = sf_cfg, cache_cfg
+        self.graph, self.spec = graph, spec
+        self.chunk = int(chunk)
+        self.n_requesters = int(n_requesters)
+        self.fanout = fanout
+        self.upgrade_bisnp = upgrade_bisnp
+        self.sf_state = (init_state if init_state is not None
+                         else sf_init_state(sf_cfg, cache_cfg, n_requesters))
+        self.keep_results = keep_results
+        self.sf_results: list[SFResult] = []
+        self.n_done = 0
+
+    def channels(self):
+        """The engine channel table matching this stream's graph."""
+        ep = self.graph.topo.endpoint
+        return make_channels(self.graph, ep.row_hit_extra_ps,
+                             ep.row_miss_extra_ps)
+
+    def __iter__(self):
+        T = self.addr.shape[0]
+        for lo in range(0, T, self.chunk):
+            hi = min(lo + self.chunk, T)
+            a, w, r = self.addr[lo:hi], self.is_write[lo:hi], self.rid[lo:hi]
+            res, ev, self.sf_state = simulate_sf(
+                jnp.asarray(a), jnp.asarray(w), jnp.asarray(r),
+                self.sf_cfg, self.cache_cfg, n_requesters=self.n_requesters,
+                return_events=True, init_state=self.sf_state,
+                return_state=True)
+            if self.keep_results:
+                self.sf_results.append(res)
+            low = lower_coherence(self.graph, self.spec, self.sf_cfg,
+                                  a, w, r, ev, fanout=self.fanout,
+                                  upgrade_bisnp=self.upgrade_bisnp)
+            self.n_done = hi
+            yield low.hops, coherence_issue(low, ev.fab_issue_ps)

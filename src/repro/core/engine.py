@@ -164,7 +164,53 @@ class Schedule(NamedTuple):
     converged: jnp.ndarray  # () bool
 
 
-def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False):
+class StreamCarry(NamedTuple):
+    """Per-channel frontier state carried across streaming windows
+    (`core.streaming`).
+
+    The FCFS service order on a channel equals the global key order
+    ``(arrival, flat index)``, so once every item that can still arrive has
+    a later key, the channel's history collapses to the state after its
+    last settled item — exactly the scan carry `_one_round` threads through
+    a segment.  A window seeded with this state schedules its items
+    bit-identically to the monolithic run (the `ref_des` oracle mirrors the
+    same seeds via its ``free_at`` map).
+
+    depart_ps      (C,) int64 — busy-until of the last settled serving item
+                   (0 = channel never served).
+    last_dir       (C,) int8 — its direction (-1 = none: no turnaround due).
+    last_row       (C,) int32 — last settled DRAM row (-2 = cold).
+    down_until_ps  (C,) int64 — max retraining down interval contributed by
+                   settled items/markers (0 = link up).
+    join_seed_ps   (N,) int64 or None — carried fork/join group maxes in the
+                   *window's* group-id space: entry ``g`` is the max
+                   completion of the group's already-retired contributors
+                   (`_join_gate` folds it into the scatter-max).  When
+                   non-None the window's `Hops` must carry join tables.
+    """
+
+    depart_ps: jnp.ndarray
+    last_dir: jnp.ndarray
+    last_row: jnp.ndarray
+    down_until_ps: jnp.ndarray
+    join_seed_ps: jnp.ndarray | None = None
+
+
+def empty_carry(n_channels: int, n_rows: int | None = None) -> StreamCarry:
+    """A cold carry: seeding `simulate` with it is bit-identical to no carry
+    (fresh channels, no down intervals, no retired join contributors)."""
+    return StreamCarry(
+        depart_ps=jnp.zeros(n_channels, jnp.int64),
+        last_dir=jnp.full(n_channels, -1, jnp.int8),
+        last_row=jnp.full(n_channels, -2, jnp.int32),
+        down_until_ps=jnp.zeros(n_channels, jnp.int64),
+        join_seed_ps=(None if n_rows is None
+                      else jnp.zeros(n_rows, jnp.int64)),
+    )
+
+
+def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False,
+               carry: StreamCarry | None = None):
     """One sort→segmented-scan→propagate pass.  arrive: (N, H+1).
 
     ``with_stalls=True`` (telemetry replay, `core.telemetry`) additionally
@@ -173,6 +219,14 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False):
     attributable to the channel's link-down interval alone.  The default
     path is byte-identical to the plain round (the extra outputs exist only
     under the flag, which is resolved at trace time).
+
+    ``carry`` (streaming windows, `core.streaming`) seeds every segment
+    head with the channel's carried frontier instead of a cold channel:
+    the head's previous-item state comes from a per-channel gather, the
+    turnaround gap applies only when a direction is actually carried
+    (``last_dir != -1``), and down-until state is threaded even without
+    per-hop retrain tables.  Resolved at trace time — ``carry=None``
+    compiles the exact historical scan.
     """
     n, h = hops.channel.shape
     k = n * h
@@ -203,19 +257,31 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False):
     # down-until state — resolved at trace time so the deterministic layout
     # compiles to the exact PR-1 scan
     has_retrain = hops.retrain_after_ps is not None
+    has_carry = carry is not None
+    if has_carry and with_stalls:
+        raise NotImplementedError("stall replay runs on full schedules; "
+                                  "seeded windows fold telemetry instead")
     xs = (s_chan, s_valid, s_arrive, s_dir, s_row, s_ser, s_turn, s_rowhit,
           s_rowmiss, s_bytes)
     if has_retrain:
         xs = xs + (hops.retrain_after_ps.reshape(k)[order],)
+    if has_carry:
+        seed_ix = jnp.clip(s_chan, 0, ch.bw_MBps.shape[0] - 1)
+        xs = xs + (carry.depart_ps[seed_ix], carry.last_dir[seed_ix],
+                   carry.last_row[seed_ix], carry.down_until_ps[seed_ix])
 
-    def scan_fn(carry, x):
-        if has_retrain:
-            prev_chan, prev_depart, prev_dir, prev_row, prev_down = carry
-            chan, valid, arr, drn, row, ser, turn, rhit, rmiss, nbytes, \
-                retrain = x
+    def scan_fn(state, x):
+        if has_retrain or has_carry:
+            prev_chan, prev_depart, prev_dir, prev_row, prev_down = state
         else:
-            prev_chan, prev_depart, prev_dir, prev_row = carry
-            chan, valid, arr, drn, row, ser, turn, rhit, rmiss, nbytes = x
+            prev_chan, prev_depart, prev_dir, prev_row = state
+        chan, valid, arr, drn, row, ser, turn, rhit, rmiss, nbytes = x[:10]
+        ix = 10
+        if has_retrain:
+            retrain = x[ix]
+            ix += 1
+        if has_carry:
+            sd_dep, sd_dir, sd_row, sd_down = x[ix:ix + 4]
         # zero-byte packets ride a side channel (e.g. DRAM command path):
         # they pass through instantly and do not occupy or turn the bus.
         # Exception: a zero-byte hop carrying retrain_after_ps is a
@@ -226,31 +292,65 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False):
             marker = valid & (nbytes == 0) & (retrain > 0)
         valid = valid & (nbytes > 0)
         same = chan == prev_chan
-        gap = jnp.where(same & (drn != prev_dir), turn, 0)
-        floor = prev_depart + gap
-        if has_retrain:
-            # a retraining link grants nothing until down_until passes; the
-            # state is per channel, i.e. per scan segment — reset on entry
-            seg_down = jnp.where(same, prev_down, jnp.int64(0))
+        if has_carry:
+            # segment heads resume from the carried per-channel frontier
+            # (gathered seeds) instead of a cold channel; the turnaround
+            # gap requires an actually-carried direction
+            eff_dep = jnp.where(same, prev_depart, sd_dep)
+            eff_dir = jnp.where(same, prev_dir, sd_dir)
+            eff_row = jnp.where(same, prev_row, sd_row)
+            eff_down = jnp.where(same, prev_down, sd_down)
+            gap = jnp.where((eff_dir != jnp.int8(-1)) & (drn != eff_dir),
+                            turn, 0)
+            start = jnp.maximum(arr, jnp.maximum(eff_dep + gap, eff_down))
+            row_extra = jnp.where(
+                row >= 0, jnp.where(row == eff_row, rhit, rmiss), 0)
+        else:
+            gap = jnp.where(same & (drn != prev_dir), turn, 0)
+            floor = prev_depart + gap
+            if has_retrain:
+                # a retraining link grants nothing until down_until passes;
+                # the state is per channel, i.e. per scan segment — reset
+                # on entry
+                seg_down = jnp.where(same, prev_down, jnp.int64(0))
+                if with_stalls:
+                    # grant time the item would have seen on a healthy
+                    # link — the retrain stall is whatever the down
+                    # interval adds on top
+                    nodown = jnp.where(same, jnp.maximum(arr, floor), arr)
+                floor = jnp.maximum(floor, seg_down)
+            start = jnp.where(same, jnp.maximum(arr, floor), arr)
             if with_stalls:
-                # grant time the item would have seen on a healthy link —
-                # the retrain stall is whatever the down interval adds on top
-                nodown = jnp.where(same, jnp.maximum(arr, floor), arr)
-            floor = jnp.maximum(floor, seg_down)
-        start = jnp.where(same, jnp.maximum(arr, floor), arr)
-        if with_stalls:
-            stall = (jnp.where(valid, start - nodown, 0) if has_retrain
-                     else jnp.zeros_like(start))
-        row_managed = row >= 0
-        row_extra = jnp.where(
-            row_managed,
-            jnp.where(same & (row == prev_row), rhit, rmiss),
-            0,
-        )
+                stall = (jnp.where(valid, start - nodown, 0) if has_retrain
+                         else jnp.zeros_like(start))
+            row_managed = row >= 0
+            row_extra = jnp.where(
+                row_managed,
+                jnp.where(same & (row == prev_row), rhit, rmiss),
+                0,
+            )
         depart = start + ser + row_extra
         start = jnp.where(valid, start, arr)
         depart = jnp.where(valid, depart, arr)
         ys = (start, depart) + ((stall,) if with_stalls else ())
+        if has_carry:
+            # markers keep the seeded frontier alive (the carried channel
+            # history must survive a marker opening a segment) and only
+            # raise down_until; serving items advance it as usual
+            mk = marker if has_retrain else jnp.zeros_like(valid)
+            upd = valid | mk
+            new_carry = (
+                jnp.where(upd, chan, prev_chan),
+                jnp.where(valid, depart, jnp.where(mk, eff_dep, prev_depart)),
+                jnp.where(valid, drn, jnp.where(mk, eff_dir, prev_dir)),
+                jnp.where(valid & (row >= 0), row,
+                          jnp.where(upd, eff_row, prev_row)),
+            )
+            contrib = (jnp.where(retrain > 0, depart + retrain, jnp.int64(0))
+                       if has_retrain else jnp.int64(0))
+            new_down = jnp.maximum(eff_down, contrib)
+            new_carry = new_carry + (jnp.where(upd, new_down, prev_down),)
+            return new_carry, ys
         if not has_retrain:
             new_carry = (
                 jnp.where(valid, chan, prev_chan),
@@ -282,7 +382,7 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False):
         return new_carry, ys
 
     init = (jnp.int32(-1), jnp.int64(0), jnp.int8(-1), jnp.int32(-2))
-    if has_retrain:
+    if has_retrain or has_carry:
         init = init + (jnp.int64(0),)
     _, out = jax.lax.scan(scan_fn, init, xs)
     s_start, s_depart = out[0], out[1]
@@ -304,7 +404,7 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False):
     return new_arrive, start, depart
 
 
-def _join_gate(hops: Hops, issue_ps, arrive):
+def _join_gate(hops: Hops, issue_ps, arrive, join_seed=None):
     """Fork/join issue gating: the effective issue time of a waiter row is
     ``max(issue, max completion of its group's contributors)``.
 
@@ -314,6 +414,10 @@ def _join_gate(hops: Hops, issue_ps, arrive):
     order, where a running max over completions is not computable; between
     rounds it is exact at the fixpoint, and join delays only ever grow, so
     the contention-free initialization stays a valid lower bound).
+
+    ``join_seed`` ((N,) int64, streaming windows) folds in the carried
+    completions of contributors that already retired in earlier windows —
+    `StreamCarry.join_seed_ps`, indexed in the window's group-id space.
     """
     n, h = hops.channel.shape
     comp = arrive[:, h]
@@ -321,6 +425,8 @@ def _join_gate(hops: Hops, issue_ps, arrive):
     gmax = jnp.zeros((n,), jnp.int64).at[
         jnp.where(contrib, hops.join_id, 0)
     ].max(jnp.where(contrib, comp, jnp.int64(0)))
+    if join_seed is not None:
+        gmax = jnp.maximum(gmax, join_seed)
     wait = hops.join_wait >= 0
     gate = gmax[jnp.clip(hops.join_wait, 0, n - 1)]
     return jnp.where(wait, jnp.maximum(issue_ps, gate), issue_ps)
@@ -328,7 +434,8 @@ def _join_gate(hops: Hops, issue_ps, arrive):
 
 @functools.partial(jax.jit, static_argnames=("max_rounds",))
 def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
-             max_rounds: int = 0) -> Schedule:
+             max_rounds: int = 0,
+             carry: StreamCarry | None = None) -> Schedule:
     """Resolve the exact FCFS schedule of all transactions.
 
     max_rounds=0 picks ``3*H + 8`` (always sufficient for chain-only
@@ -336,10 +443,17 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
     rows, so join-heavy lowerings pass an explicit budget or go through
     ``simulate_auto``).  Convergence is verified and reported in
     ``Schedule.converged``.
+
+    ``carry`` (`StreamCarry`, built by `core.streaming`) seeds the window
+    with the per-channel frontier / down-until state and retired join-group
+    maxes of everything already settled — the streaming windowed mode.
+    ``carry=None`` (the default) traces the exact historical program, so
+    non-streaming entry points stay bit- and jit-cache-identical.
     """
     n, h = hops.channel.shape
     rounds = max_rounds if max_rounds > 0 else 3 * h + 8
     has_join = hops.join_id is not None
+    join_seed = carry.join_seed_ps if carry is not None else None
 
     # contention-free lower bound initialization (sampled replay stretch
     # included: it delays the item even uncontended; retraining stalls and
@@ -359,10 +473,10 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
 
     def body(state):
         i, arrive, _, _, _ = state
-        eff_issue = (_join_gate(hops, issue_ps, arrive) if has_join
-                     else issue_ps)
+        eff_issue = (_join_gate(hops, issue_ps, arrive, join_seed)
+                     if has_join else issue_ps)
         new_arrive, start, depart = _one_round(hops, channels, eff_issue,
-                                               arrive)
+                                               arrive, carry=carry)
         changed = jnp.any(new_arrive != arrive)
         return i + 1, new_arrive, start, depart, changed
 
@@ -398,7 +512,8 @@ def replay_round(hops: Hops, channels: Channels, sched: Schedule):
 # ---------------------------------------------------------------------------
 
 def simulate_auto(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
-                  max_rounds: int = 0) -> tuple[Schedule, bool]:
+                  max_rounds: int = 0, check: bool = True,
+                  carry: StreamCarry | None = None) -> tuple[Schedule, bool]:
     """Exact schedule with oracle fallback.
 
     The fixpoint converges in O(hops) rounds for feed-forward traffic (the
@@ -408,13 +523,24 @@ def simulate_auto(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
     unbounded rounds, fall back to the event-driven oracle (`core.ref_des`),
     which is exact by construction and fast at bench sizes.  Returns
     (schedule, used_oracle).
+
+    ``check=False`` skips the ``bool(sched.converged)`` readback — the only
+    device→host sync on this path.  Callers that already pull the schedule
+    to the host (the streaming driver does, every window, for carry
+    extraction) use it to keep the window pipeline transfer-free and run
+    their own fallback; the returned schedule may then be unconverged.
+    ``carry`` threads streaming window state into both the fixpoint and the
+    oracle fallback.
     """
-    sched = simulate(hops, channels, issue_ps, max_rounds=max_rounds)
+    sched = simulate(hops, channels, issue_ps, max_rounds=max_rounds,
+                     carry=carry)
+    if not check:
+        return sched, False
     if bool(sched.converged):
         return sched, False
     from . import ref_des  # local import: oracle pulls in heapq only
 
-    ref = ref_des.simulate_ref(hops, channels, issue_ps)
+    ref = ref_des.simulate_ref(hops, channels, issue_ps, carry=carry)
     n, h = hops.channel.shape
     return Schedule(
         arrive=jnp.asarray(ref["arrive"]),

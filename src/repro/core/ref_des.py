@@ -66,7 +66,13 @@ def ref_schedule(ref: dict) -> Schedule:
     )
 
 
-def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
+def simulate_ref(hops: Hops, channels: Channels, issue_ps,
+                 carry=None) -> dict:
+    """``carry`` (`engine.StreamCarry`, streaming windows) seeds the
+    per-channel ``free_at`` state — busy-until, last direction, last DRAM
+    row, down-until — and the per-group join maxes of contributors that
+    retired in earlier windows, mirroring the engine's carry-seeded scan so
+    windowed oracle fallbacks stay bit-exact against the monolithic run."""
     chan = np.asarray(hops.channel)
     nbytes = np.asarray(hops.nbytes)
     direction = np.asarray(hops.direction)
@@ -116,6 +122,17 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
     free_at = {}      # channel -> (time, last_dir, last_row, down_until)
     queues = {}       # channel -> heap of (arrival, flat_idx, pkt, hop)
     markers = {}      # channel -> list of ((arrival, flat_idx), down_end)
+    jseed = None
+    if carry is not None:
+        c_dep = np.asarray(carry.depart_ps)
+        c_dir = np.asarray(carry.last_dir)
+        c_row = np.asarray(carry.last_row)
+        c_down = np.asarray(carry.down_until_ps)
+        for c in range(c_dep.shape[0]):
+            free_at[c] = (int(c_dep[c]), int(c_dir[c]), int(c_row[c]),
+                          int(c_down[c]))
+        if carry.join_seed_ps is not None:
+            jseed = np.asarray(carry.join_seed_ps)
 
     # fork/join state: contributor counts, running (count, max-completion)
     # per group, and the waiter rows each group releases on completion
@@ -140,6 +157,13 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
             if n_contrib[g] > 0:      # empty groups never gate (engine: max
                 waiters.setdefault(g, []).append(p)   # over nothing == 0)
         jdone = {}                    # group -> [completions seen, max comp]
+        if jseed is not None:
+            # carried group maxes: completions of contributors that retired
+            # in earlier windows count toward the release max (their arity
+            # share was already subtracted by the streaming driver)
+            for g in range(n):
+                if jseed[g] > 0:
+                    jdone[g] = (0, int(jseed[g]))
         completed = np.zeros(n, bool)
         released = np.zeros(n, bool)
 
@@ -147,9 +171,17 @@ def simulate_ref(hops: Hops, channels: Channels, issue_ps) -> dict:
     ev = []
     seq = 0
     for p in range(n):
-        if join_id is not None and int(join_wait[p]) >= 0 \
-                and n_contrib[int(join_wait[p])] > 0:
-            continue                  # held until the group's join releases
+        if join_id is not None and int(join_wait[p]) >= 0:
+            g = int(join_wait[p])
+            if n_contrib[g] > 0:
+                continue              # held until the group's join releases
+            if jseed is not None and jseed[g] > 0:
+                # every contributor already retired: the gate is the
+                # carried max, resolvable at push time
+                arrive[p, 0] = max(int(issue[p]), int(jseed[g]))
+                heapq.heappush(ev, (int(arrive[p, 0]), seq, 0, (p, 0)))
+                seq += 1
+                continue
         arrive[p, 0] = issue[p]
         heapq.heappush(ev, (int(issue[p]), seq, 0, (p, 0)))
         seq += 1

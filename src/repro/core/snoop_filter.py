@@ -112,6 +112,52 @@ class SFEvents(NamedTuple):
     invblk_len: jnp.ndarray     # (T,) int32 InvBlk run length (0 if none)
 
 
+class SFState(NamedTuple):
+    """Dense per-step protocol state of the `simulate_sf` scan (hoisted to
+    module level so chunked streaming can thread it across calls: protocol
+    decisions depend only on request order, so running a stream chunk by
+    chunk with the state carried — `sf_init_state` / ``init_state=`` /
+    ``return_state=True`` — reproduces the monolithic scan bit-exactly)."""
+
+    cache_tag: jnp.ndarray   # (R, Cc) int32, -1 empty
+    cache_seq: jnp.ndarray   # (R, Cc) int64 LRU stamps
+    sf_tag: jnp.ndarray      # (Cs,) int32, -1 empty
+    sf_owner: jnp.ndarray    # (Cs,) int32 bitmask
+    sf_dirty: jnp.ndarray    # (Cs,) bool
+    sf_ins: jnp.ndarray      # (Cs,) int64 insertion stamps
+    sf_acc: jnp.ndarray      # (Cs,) int64 access stamps
+    lfi_count: jnp.ndarray   # (F,) int32 per-address insert counts
+    present: jnp.ndarray     # (F,) bool SF presence bitmap
+    clock: jnp.ndarray       # (R,) int64 per-requester time
+    bus_free: jnp.ndarray    # () int64
+    seq: jnp.ndarray         # () int64
+    bisnp: jnp.ndarray       # () int64
+    inval: jnp.ndarray       # () int64
+
+
+def sf_init_state(sf_cfg: SFConfig, cache_cfg: CacheConfig,
+                  n_requesters: int = 1) -> SFState:
+    """Cold protocol state (what `simulate_sf` starts from by default)."""
+    R, Cc, Cs = n_requesters, cache_cfg.capacity, sf_cfg.capacity
+    F = sf_cfg.footprint_lines
+    return SFState(
+        cache_tag=jnp.full((R, Cc), -1, jnp.int32),
+        cache_seq=jnp.zeros((R, Cc), jnp.int64),
+        sf_tag=jnp.full((Cs,), -1, jnp.int32),
+        sf_owner=jnp.zeros((Cs,), jnp.int32),
+        sf_dirty=jnp.zeros((Cs,), bool),
+        sf_ins=jnp.zeros((Cs,), jnp.int64),
+        sf_acc=jnp.zeros((Cs,), jnp.int64),
+        lfi_count=jnp.zeros((F,), jnp.int32),
+        present=jnp.zeros((F,), bool),
+        clock=jnp.zeros((R,), jnp.int64),
+        bus_free=jnp.int64(0),
+        seq=jnp.int64(1),
+        bisnp=jnp.int64(0),
+        inval=jnp.int64(0),
+    )
+
+
 class SFResult(NamedTuple):
     latency_ps: jnp.ndarray       # (T,) per-request latency
     cache_hit: jnp.ndarray        # (T,) bool
@@ -159,12 +205,15 @@ def _victim_scores(policy: str, sf_tag, sf_ins, sf_acc, lfi_count, runlen):
 
 
 @functools.partial(jax.jit, static_argnames=("sf_cfg", "cache_cfg",
-                                              "n_requesters", "return_events"))
+                                              "n_requesters", "return_events",
+                                              "return_state"))
 def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
                 sf_cfg: SFConfig, cache_cfg: CacheConfig,
                 n_requesters: int = 1,
                 fabric_lat_ps: jnp.ndarray | None = None,
-                return_events: bool = False):
+                return_events: bool = False,
+                init_state: SFState | None = None,
+                return_state: bool = False):
     """Run the DCOH protocol over a merged request stream.
 
     addr      (T,) int32 line addresses in [0, footprint)
@@ -176,6 +225,15 @@ def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
     coherence_traffic` feedback); ``return_events=True`` returns
     ``(SFResult, SFEvents)``.  The defaults compile the exact isolated
     scan, bit for bit.
+
+    ``init_state`` (an `SFState`, e.g. a previous call's ``return_state``
+    output) resumes the protocol scan mid-stream: decisions depend only on
+    request order, so chunked runs threading the state equal the monolithic
+    scan bit for bit.  Carried clocks/counters are cumulative, so a chunk's
+    ``total_time_ps`` / ``bisnp_events`` are absolute (streaming callers
+    diff across chunks if they want per-chunk figures; ``bandwidth_MBps``
+    divides only this chunk's bytes and is meaningful on the last chunk).
+    ``return_state=True`` appends the final `SFState` to the return tuple.
     """
     T = addr.shape[0]
     R, Cc, Cs = n_requesters, cache_cfg.capacity, sf_cfg.capacity
@@ -186,42 +244,13 @@ def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
         else (sf_cfg.line_bytes * 1_000_000_000_000) // (sf_cfg.bus_MBps * 1_000_000)
     )
 
-    class S(NamedTuple):
-        cache_tag: jnp.ndarray   # (R, Cc) int32, -1 empty
-        cache_seq: jnp.ndarray   # (R, Cc) int64 LRU stamps
-        sf_tag: jnp.ndarray      # (Cs,) int32, -1 empty
-        sf_owner: jnp.ndarray    # (Cs,) int32 bitmask
-        sf_dirty: jnp.ndarray    # (Cs,) bool
-        sf_ins: jnp.ndarray      # (Cs,) int64 insertion stamps
-        sf_acc: jnp.ndarray      # (Cs,) int64 access stamps
-        lfi_count: jnp.ndarray   # (F,) int32 per-address insert counts
-        present: jnp.ndarray     # (F,) bool SF presence bitmap
-        clock: jnp.ndarray       # (R,) int64 per-requester time
-        bus_free: jnp.ndarray    # () int64
-        seq: jnp.ndarray         # () int64
-        bisnp: jnp.ndarray       # () int64
-        inval: jnp.ndarray       # () int64
-
-    init = S(
-        cache_tag=jnp.full((R, Cc), -1, jnp.int32),
-        cache_seq=jnp.zeros((R, Cc), jnp.int64),
-        sf_tag=jnp.full((Cs,), -1, jnp.int32),
-        sf_owner=jnp.zeros((Cs,), jnp.int32),
-        sf_dirty=jnp.zeros((Cs,), bool),
-        sf_ins=jnp.zeros((Cs,), jnp.int64),
-        sf_acc=jnp.zeros((Cs,), jnp.int64),
-        lfi_count=jnp.zeros((F,), jnp.int32),
-        present=jnp.zeros((F,), bool),
-        clock=jnp.zeros((R,), jnp.int64),
-        bus_free=jnp.int64(0),
-        seq=jnp.int64(1),
-        bisnp=jnp.int64(0),
-        inval=jnp.int64(0),
-    )
+    S = SFState
+    init = (sf_init_state(sf_cfg, cache_cfg, n_requesters)
+            if init_state is None else init_state)
 
     maxlen = max(int(sf_cfg.invblk_max), 1)
 
-    def step(s: S, x):
+    def step(s: SFState, x):
         if fabric_lat_ps is None:
             a, w, r = x
         else:
@@ -399,15 +428,18 @@ def simulate_sf(addr: jnp.ndarray, is_write: jnp.ndarray, req_id: jnp.ndarray,
         final_sf_tag=final.sf_tag, final_sf_owner=final.sf_owner,
         final_cache_tag=final.cache_tag,
     )
-    if not return_events:
-        return res
-    fab_issue, bisnp_mask, inv_lines, wb_lines, need_victim, conflict, \
-        invblk_len = outs[4:]
-    return res, SFEvents(
-        fab_issue_ps=fab_issue, cache_hit=chit, bisnp_mask=bisnp_mask,
-        inv_lines=inv_lines, wb_lines=wb_lines, need_victim=need_victim,
-        conflict=conflict, invblk_len=invblk_len,
-    )
+    out = (res,)
+    if return_events:
+        fab_issue, bisnp_mask, inv_lines, wb_lines, need_victim, conflict, \
+            invblk_len = outs[4:]
+        out = out + (SFEvents(
+            fab_issue_ps=fab_issue, cache_hit=chit, bisnp_mask=bisnp_mask,
+            inv_lines=inv_lines, wb_lines=wb_lines, need_victim=need_victim,
+            conflict=conflict, invblk_len=invblk_len,
+        ),)
+    if return_state:
+        out = out + (final,)
+    return out if len(out) > 1 else res
 
 
 def make_skewed_stream(n: int, footprint: int, hot_frac: float = 0.1,

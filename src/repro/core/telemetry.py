@@ -419,6 +419,114 @@ def sketch_quantiles(sk: QuantileSketch,
 
 
 # ---------------------------------------------------------------------------
+# Streaming fold (windowed simulation accumulator)
+# ---------------------------------------------------------------------------
+
+
+class StreamTelemetry(NamedTuple):
+    """Running accumulator for windowed simulation (`core.streaming`) —
+    what the driver carries instead of materializing per-window
+    ``Schedule``s.
+
+    Per-window contributions are masked to *settled* items / *retired*
+    rows, so boundary-spanning rows (which reappear in later windows as
+    carried suffixes) fold exactly once and streaming totals equal the
+    monolithic `channel_telemetry` counters bit-for-bit.  The latency
+    sketch is `QuantileSketch` (mergeable, so merging per-window folds
+    equals sketching the monolithic latencies).  Peak backlog is the one
+    counter that cannot stream (it needs a global event sort); use the
+    monolithic pass when it matters.
+
+    payload_bytes/wire_bytes/busy_ps/wait_ps  (C,) int64 channel counters.
+    sketch        latency `QuantileSketch` over retired requests.
+    n_retired     () int64 requests retired so far.
+    t0_ps/t1_ps   () int64 observation span (min issue / max completion of
+                  retired requests; int64-max / 0 while empty).
+    """
+
+    sketch: QuantileSketch
+    payload_bytes: jnp.ndarray
+    wire_bytes: jnp.ndarray
+    busy_ps: jnp.ndarray
+    wait_ps: jnp.ndarray
+    n_retired: jnp.ndarray
+    t0_ps: jnp.ndarray
+    t1_ps: jnp.ndarray
+
+
+def stream_telemetry_new(n_channels: int) -> StreamTelemetry:
+    z = jnp.zeros(n_channels, jnp.int64)
+    return StreamTelemetry(
+        sketch=sketch_new(), payload_bytes=z, wire_bytes=z, busy_ps=z,
+        wait_ps=z, n_retired=jnp.int64(0),
+        t0_ps=jnp.int64((1 << 62) - 1 + (1 << 62)), t1_ps=jnp.int64(0),
+    )
+
+
+@jax.jit
+def stream_telemetry_fold(acc: StreamTelemetry, hops: Hops,
+                          channels: Channels, sched: Schedule,
+                          settled: jnp.ndarray, retired: jnp.ndarray,
+                          latency_ps: jnp.ndarray) -> StreamTelemetry:
+    """Fold one resolved window into the accumulator.
+
+    settled     (N, H) bool — items whose (start, depart) are final this
+                window (never again: the driver's settlement mask).
+    retired     (N,) bool — rows completing this window (padding excluded).
+    latency_ps  (N,) int64 — ``complete − original issue`` per retired row
+                (the original issue survives window re-entry; junk where
+                ``retired`` is False).
+    """
+    c = channels.bw_MBps.shape[0]
+    n, h = hops.channel.shape
+    k = n * h
+    occupied = (hops.valid & (hops.nbytes > 0) & settled).reshape(k)
+    flat_c = jnp.where(occupied, hops.channel.reshape(k), c)
+
+    def per_chan(x):
+        return jnp.zeros(c + 1, jnp.int64).at[flat_c].add(
+            jnp.where(occupied, x, 0))[:c]
+
+    busy = per_chan((sched.depart - sched.start).reshape(k))
+    wait = per_chan((sched.start - sched.arrive[:, :h]).reshape(k))
+    payload = per_chan(jnp.where(hops.is_payload.reshape(k),
+                                 hops.nbytes.reshape(k), 0))
+    wire = per_chan(hop_wire_bytes(hops, channels).reshape(k))
+
+    big = jnp.int64((1 << 62) - 1 + (1 << 62))
+    iss = sched.complete - latency_ps
+    return StreamTelemetry(
+        sketch=sketch_update(acc.sketch, latency_ps, mask=retired),
+        payload_bytes=acc.payload_bytes + payload,
+        wire_bytes=acc.wire_bytes + wire,
+        busy_ps=acc.busy_ps + busy,
+        wait_ps=acc.wait_ps + wait,
+        n_retired=acc.n_retired + jnp.sum(retired.astype(jnp.int64)),
+        t0_ps=jnp.minimum(acc.t0_ps, jnp.min(jnp.where(retired, iss, big))),
+        t1_ps=jnp.maximum(acc.t1_ps,
+                          jnp.max(jnp.where(retired, sched.complete, 0))),
+    )
+
+
+def stream_telemetry_finalize(acc: StreamTelemetry,
+                              qs=(0.5, 0.99, 0.999)) -> dict:
+    """Host-side summary of a finished (or in-progress) stream fold."""
+    span = max(int(acc.t1_ps) - int(acc.t0_ps), 1)
+    import numpy as np
+
+    return {
+        "n_retired": int(acc.n_retired),
+        "quantiles_ps": np.asarray(sketch_quantiles(acc.sketch, qs)),
+        "payload_bytes": np.asarray(acc.payload_bytes),
+        "wire_bytes": np.asarray(acc.wire_bytes),
+        "busy_ps": np.asarray(acc.busy_ps),
+        "wait_ps": np.asarray(acc.wait_ps),
+        "utilization": np.asarray(acc.busy_ps) / span,
+        "span_ps": span,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Snoop-filter protocol counters
 # ---------------------------------------------------------------------------
 

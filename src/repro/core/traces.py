@@ -86,8 +86,96 @@ def generate(name: str, n: int = 100_000, footprint_lines: int = 1 << 16,
     }
 
 
+ARRIVAL_PATTERNS = ("uniform", "poisson", "bursty", "periodic")
+
+
+def arrival_times(n: int, mean_gap_ps: int = 2000,
+                  pattern: str = "uniform", seed: int = 0,
+                  burst_len: int = 64, duty: float = 0.25,
+                  period: int = 4096) -> np.ndarray:
+    """Issue times (ps, non-decreasing, first at 0) for an ``n``-request
+    open-loop stream at a target mean inter-arrival gap.
+
+      uniform    constant gap (the seed benches' implicit timing);
+      poisson    exponential gaps — memoryless datacenter arrivals;
+      bursty     ON-OFF: bursts of ``burst_len`` requests at ``duty`` of the
+                 mean gap, separated by pauses that restore the mean rate —
+                 the tail-stressing shape (queue builds inside every burst);
+      periodic   sinusoid-modulated gap (±60 % over ``period`` requests) —
+                 diurnal-style load swings.
+
+    De-randomized like `generate`: crc32 of the pattern name folds into the
+    seed, so streams reproduce across processes.
+    """
+    if pattern not in ARRIVAL_PATTERNS:
+        raise KeyError(f"unknown arrival pattern {pattern!r}; "
+                       f"have {ARRIVAL_PATTERNS}")
+    rng = np.random.default_rng(
+        seed + zlib.crc32(("arr:" + pattern).encode()) % 65536)
+    if pattern == "uniform":
+        gaps = np.full(n, mean_gap_ps, np.int64)
+    elif pattern == "poisson":
+        gaps = rng.exponential(mean_gap_ps, n).astype(np.int64)
+    elif pattern == "bursty":
+        on_gap = max(int(mean_gap_ps * duty), 1)
+        pause = burst_len * mean_gap_ps - (burst_len - 1) * on_gap
+        gaps = np.where(np.arange(n) % burst_len == 0,
+                        np.int64(max(pause, 0)), np.int64(on_gap))
+    else:  # periodic
+        phase = 2.0 * np.pi * (np.arange(n) % period) / period
+        gaps = (mean_gap_ps * (1.0 + 0.6 * np.sin(phase))).astype(np.int64)
+    gaps = np.maximum(gaps, 0)
+    if n:
+        gaps[0] = 0
+    return np.cumsum(gaps).astype(np.int64)
+
+
+def tenant_mix(tenants, n: int = 10_000, footprint_lines: int = 4096,
+               seed: int = 0) -> dict:
+    """Multi-tenant trace: each named workload runs in a private partition
+    of the footprint and requests interleave round-robin — the noisy-
+    neighbour shape (one tenant's bursts queue behind another's scans on the
+    shared fabric).  ``tenant`` gives each request's tenant index; tenant
+    substreams are crc32-de-randomized and decorrelated by tenant slot."""
+    tenants = list(tenants)
+    t = max(len(tenants), 1)
+    share = max(footprint_lines // t, 1)
+    tid = (np.arange(n) % t).astype(np.int32)
+    addr = np.zeros(n, np.int64)
+    is_write = np.zeros(n, bool)
+    for i, name in enumerate(tenants):
+        m = tid == i
+        tr = generate(name, n=int(m.sum()), footprint_lines=share,
+                      seed=seed + 7919 * i)
+        addr[m] = (tr["addr"] % share) + i * share
+        is_write[m] = tr["is_write"]
+    return {
+        "name": "mix:" + "+".join(tenants),
+        "addr": addr,
+        "is_write": is_write,
+        "tenant": tid,
+        "mix_degree": mix_degree(is_write),
+        "synthetic": True,
+    }
+
+
+def _block(name: str, m: int, footprint_lines: int, seed: int):
+    """One (addr, is_write, rid-or-None) block; ``mix:a+b`` names build a
+    `tenant_mix` whose tenant index doubles as the requester id."""
+    if name.startswith("mix:"):
+        tr = tenant_mix(name[4:].split("+"), n=m,
+                        footprint_lines=footprint_lines, seed=seed)
+        return (tr["addr"] % footprint_lines).astype(np.int32), \
+            tr["is_write"], tr["tenant"]
+    tr = generate(name, n=m, footprint_lines=footprint_lines, seed=seed)
+    return (tr["addr"] % footprint_lines).astype(np.int32), \
+        tr["is_write"], None
+
+
 def request_stream(name: str, n: int = 10_000, footprint_lines: int = 4096,
-                   n_requesters: int = 1, seed: int = 0):
+                   n_requesters: int = 1, seed: int = 0,
+                   chunk: int | None = None, timing: str | None = None,
+                   mean_gap_ps: int = 2000):
     """Trace-driven request stream for the snoop-filter / coherence-fabric
     pipeline (paper §V-E trace mode driving the §V-B/§V-C machinery).
 
@@ -97,13 +185,52 @@ def request_stream(name: str, n: int = 10_000, footprint_lines: int = 4096,
     `snoop_filter.make_skewed_stream`, so any bench accepting a stream
     source runs real-workload mixes unchanged.  Returns
     ``(addr, is_write, req_id)`` jnp arrays.
+
+    Extensions (the streaming engine's front end):
+
+      * ``name="mix:redis+silo"`` runs a `tenant_mix`; the tenant index
+        becomes the requester id.
+      * ``timing`` (an `ARRIVAL_PATTERNS` name) appends an ``issue_ps``
+        array from `arrival_times` — a 4-tuple instead of 3.
+      * ``chunk=m`` returns a **generator** of such tuples, ``m`` requests
+        each, for `streaming.simulate_stream`-style consumption at flat
+        memory.  Chunks are independent per-chunk substreams (block ``b``
+        reseeds at ``seed + 1000003·b`` — chunked output is deterministic
+        but intentionally *not* request-for-request equal to the monolithic
+        trace); issue times chain across chunks so the stream stays
+        time-ordered.
     """
     import jax.numpy as jnp
 
-    tr = generate(name, n=n, footprint_lines=footprint_lines, seed=seed)
-    addr = (tr["addr"] % footprint_lines).astype(np.int32)
-    rid = (np.arange(n) % max(n_requesters, 1)).astype(np.int32)
-    return jnp.asarray(addr), jnp.asarray(tr["is_write"]), jnp.asarray(rid)
+    if timing is None and chunk is not None:
+        timing = "uniform"
+
+    def emit(m, blk_seed, t0):
+        addr, is_write, tenant = _block(name, m, footprint_lines, blk_seed)
+        rid = (tenant if tenant is not None
+               else (np.arange(m) % max(n_requesters, 1)).astype(np.int32))
+        out = (jnp.asarray(addr), jnp.asarray(is_write), jnp.asarray(rid))
+        if timing is None:
+            return out
+        iss = t0 + arrival_times(m, mean_gap_ps=mean_gap_ps,
+                                 pattern=timing, seed=blk_seed)
+        return out + (jnp.asarray(iss),)
+
+    if chunk is None:
+        return emit(n, seed, 0)
+
+    def gen():
+        t0 = 0
+        b = 0
+        left = n
+        while left > 0:
+            m = min(chunk, left)
+            yield emit(m, seed + 1000003 * b, t0)
+            t0 += m * mean_gap_ps
+            b += 1
+            left -= m
+
+    return gen()
 
 
 def load_csv(path: str) -> dict:
