@@ -46,6 +46,7 @@ from repro.core.coherence_traffic import (CoherenceFabricSpec, bisnp_latencies,
                                           lower_coherence, pad_rows)
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import make_channels, simulate
+from repro.core.verify import verify_built, verify_workload
 from repro.core.snoop_filter import (CacheConfig, SFConfig,
                                      make_sequential_stream,
                                      make_skewed_stream, simulate_sf)
@@ -99,7 +100,9 @@ def _background(graph, bg_nodes, dev_node, load: float, span_ps: int):
                            payload_bytes=BG_PAYLOAD, seed=17 + i,
                            issue_jitter="exp")   # Poisson arrivals
              for i, b in enumerate(bg_nodes)]
-    return build_workload(graph, specs, header_bytes=16, warmup_frac=0.0)
+    wl = build_workload(graph, specs, header_bytes=16, warmup_frac=0.0)
+    verify_built(wl, graph).raise_if_failed()
+    return wl
 
 
 def _sf_cfg(policy: str, capacity: int, footprint: int) -> SFConfig:
@@ -138,6 +141,10 @@ def coupled_policy_sweep(stream, capacity: int, footprint: int,
         evs[p] = ev
         lows[p] = lower_coherence(graph, spec, cfgs[p], addr, wr, rid, ev,
                                   fanout=fanout)
+        verify_workload(lows[p].hops, channels,
+                        coherence_issue(lows[p], ev.fab_issue_ps),
+                        sf_events=ev,
+                        chan_pair=graph.chan_pair).raise_if_failed()
     span = max(int(isolated[p].total_time_ps) for p in policies)
     background = _background(graph, bg_nodes, spec.dev_node, bg_load, span)
 
@@ -297,6 +304,8 @@ def run_fanout_sweep(owner_counts=(1, 2, 3, 4), n: int = 600,
             low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev,
                                   fanout=fanout, upgrade_bisnp=False)
             issue = coherence_issue(low, ev.fab_issue_ps)
+            verify_workload(low.hops, channels, issue, sf_events=ev,
+                            chan_pair=graph.chan_pair).raise_if_failed()
             sched = simulate(low.hops, channels, issue,
                              max_rounds=MAX_ROUNDS)
             assert bool(sched.converged), f"fanout={fanout} did not converge"

@@ -26,6 +26,7 @@ import numpy as np
 from repro.core import topology as T
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import request_stats, simulate
+from repro.core.verify import verify_built
 
 from .common import Row, Timer
 
@@ -82,6 +83,7 @@ def run_mode(mode: str, n_acc: int, n_per: int = 300):
         wl = build_workload(graph, specs, header_bytes=16, warmup_frac=0.25,
                             route_choice=rng.integers(0, 1 << 20,
                                                       n_per * n_acc))
+        verify_built(wl, graph).raise_if_failed()
         sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
         r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                           wl.measured)
@@ -102,6 +104,7 @@ def run_mode(mode: str, n_acc: int, n_per: int = 300):
     wl = build_workload(graph, specs, header_bytes=16, warmup_frac=0.25,
                         route_choice=rng.integers(0, 1 << 20,
                                                   2 * n_per * n_acc))
+    verify_built(wl, graph).raise_if_failed()
     sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                       wl.measured)

@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import topology as T
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import channel_stats, request_stats, simulate_auto
+from repro.core.verify import verify_built
 
 from .common import Row, Timer
 
@@ -35,6 +36,7 @@ def run_one(read_ratio: float, header: int, duplex: str, n: int = 4000,
                          pattern="uniform", read_ratio=read_ratio,
                          issue_interval_ps=200, seed=11)
     wl = build_workload(graph, [spec], header_bytes=header, warmup_frac=0.0)
+    verify_built(wl, graph).raise_if_failed()
     sched, used_oracle = simulate_auto(wl.hops, wl.channels, wl.issue_ps,
                                        max_rounds=120)
     rstats = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,

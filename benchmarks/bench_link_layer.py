@@ -30,6 +30,7 @@ from repro.core.calibration import (PCIE5_X16_MBPS, PCIE5_X16_RAW_MBPS,
                                     PCIE6_X16_RAW_MBPS)
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import channel_stats, request_stats, simulate_auto
+from repro.core.verify import verify_built
 from repro.core.link_layer import (FlitConfig, flit_efficiency,
                                    replay_overhead_ppm)
 
@@ -46,7 +47,9 @@ def _bus_workload(bw_MBps: int, flit, n: int, payload: int = 944,
     spec = RequesterSpec(node=0, n_requests=n, targets=[2, 3, 4, 5],
                          pattern="uniform", read_ratio=read_ratio,
                          issue_interval_ps=100, payload_bytes=payload, seed=11)
-    return build_workload(g, [spec], header_bytes=64, warmup_frac=0.0)
+    wl = build_workload(g, [spec], header_bytes=64, warmup_frac=0.0)
+    verify_built(wl, g).raise_if_failed()
+    return wl
 
 
 def run_generation(gen: str, n: int = 2500) -> tuple[float, float]:

@@ -40,6 +40,7 @@ from repro.core import topology as T
 from repro.core.calibration import PCIE6_X16_RAW_MBPS
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import simulate
+from repro.core.verify import verify_built
 from repro.core.link_layer import (FlitConfig, apply_retrain_markers,
                                    broadcast_reliability_tables,
                                    replay_overhead_ppm, sample_hop_tables)
@@ -67,6 +68,7 @@ def _bus_workload(flit, n: int, payload: int = 944, seed: int = 11,
                          issue_interval_ps=100, payload_bytes=payload,
                          seed=seed)
     wl = build_workload(graph, [spec], header_bytes=64, warmup_frac=0.0)
+    verify_built(wl, graph).raise_if_failed()
     return (wl, graph) if with_graph else wl
 
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import Channels, Hops, simulate
 from repro.core.streaming import simulate_stream, stream_windows
+from repro.core.verify import assert_valid
 from repro.core.traces import arrival_times
 
 from .common import Row, Timer
@@ -88,6 +89,7 @@ def run(quick: bool = False) -> list[Row]:
 
     # gate: streamed == monolithic, bit for bit, at test scale -------------
     small_h, small_i = _chunk(0, 2000, 0, seed=0)
+    assert_valid(small_h, ch, small_i)
     mono = simulate(small_h, ch, small_i, max_rounds=400)
     assert bool(mono.converged)
     out = simulate_stream(stream_windows(small_h, np.asarray(small_i), 256),

@@ -31,6 +31,7 @@ from repro.core import trace_export as tx
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import simulate
 from repro.core.link_layer import FlitConfig
+from repro.core.verify import verify_built
 
 from .common import Row, Timer
 
@@ -45,7 +46,10 @@ def _bus_wl(ber: float, n: int):
     spec = RequesterSpec(node=0, n_requests=n, targets=[2, 3, 4, 5],
                          read_ratio=0.5, issue_interval_ps=300,
                          payload_bytes=944, seed=3)
-    return build_workload(topo.build(), [spec], warmup_frac=0.0)
+    graph = topo.build()
+    wl = build_workload(graph, [spec], warmup_frac=0.0)
+    verify_built(wl, graph).raise_if_failed()
+    return wl
 
 
 def _pad_stack(hops_list):

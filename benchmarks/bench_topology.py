@@ -17,6 +17,7 @@ import numpy as np
 from repro.core import topology as T
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import channel_stats, request_stats, simulate
+from repro.core.verify import verify_built
 
 from .common import Row, Timer
 
@@ -57,6 +58,7 @@ def run_one(kind: str, n_pairs: int, n_per_pair: int, interval_ps: int,
     wl = build_workload(graph, _specs(topo, n_per_pair, interval_ps),
                         header_bytes=64,
                         route_choice=rng.integers(0, 1 << 20, n_tx))
+    verify_built(wl, graph).raise_if_failed()
     sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
     rstats = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                            wl.measured)

@@ -20,6 +20,7 @@ from repro.core import topology as T
 from repro.core import traces as TR
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import request_stats, simulate, simulate_auto
+from repro.core.verify import verify_built
 
 from .common import Row, Timer
 from .bench_topology import build_topo, PORT_MBPS
@@ -45,6 +46,7 @@ def replay_topology(kind: str, trace: dict, n_pairs: int = 8,
     n_tx = per_req * len(reqs)
     wl = build_workload(graph, specs, header_bytes=64, warmup_frac=0.0,
                         route_choice=rng.integers(0, 1 << 20, n_tx))
+    verify_built(wl, graph).raise_if_failed()
     sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes, wl.measured)
     thr = float(r["bandwidth_MBps"])
@@ -60,6 +62,7 @@ def replay_bus(trace: dict, duplex: str, n: int = 3000):
                          issue_interval_ps=300, seed=3,
                          trace_addr=trace["addr"], trace_is_write=trace["is_write"])
     wl = build_workload(graph, [spec], header_bytes=16, warmup_frac=0.0)
+    verify_built(wl, graph).raise_if_failed()
     sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps, max_rounds=120)
     comp = np.asarray(sched.complete)
     makespan = comp.max() - int(np.asarray(wl.issue_ps).min())

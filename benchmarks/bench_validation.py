@@ -27,6 +27,7 @@ from repro.core.calibration import (CAL, DRAM_ROW_HIT_PS, DRAM_ROW_MISS_PS,
                                     REFERENCE_HW, TABLE_IV)
 from repro.core.devices import RequesterSpec, build_workload
 from repro.core.engine import request_stats, simulate_auto
+from repro.core.verify import verify_built
 
 from .common import Row, Timer
 
@@ -78,6 +79,7 @@ def measure(name: str, read_ratio: float, interval_ps: int, n: int = 3000,
     # bunching; see DESIGN.md measurement notes)
     wl = build_workload(graph, [spec], header_bytes=p["header"],
                         warmup_frac=0.0)
+    verify_built(wl, graph).raise_if_failed()
     sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps, max_rounds=100)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes, wl.measured)
     meas = np.asarray(wl.measured)

@@ -1,0 +1,12 @@
+"""Static-analysis layer: jit-safety lint + kernel signature cross-checks.
+
+``python -m repro.analysis [paths...]`` runs the repo-specific AST lint
+(`repro.analysis.jitlint`) over the source tree and gates on the committed
+per-file allowlist (``baseline.toml``) — intentional host syncs (the
+`ref_des` oracle, trace export, benchmark drivers) are explicit, and any
+new violation fails CI.  The fabric-IR verifier this pairs with lives in
+`repro.core.verify`; ``python -m repro.analysis.verify_smoke`` runs it over
+every lowering path the benchmarks exercise.
+"""
+
+from .jitlint import Finding, lint_paths, load_baseline, apply_baseline  # noqa: F401

@@ -1,0 +1,107 @@
+"""CLI for the jit-safety lint: ``python -m repro.analysis [paths...]``.
+
+Exit status:
+  0  — no findings beyond the committed baseline
+  1  — new findings (printed one per line, ``file:line: [rule] message``)
+  2  — usage / baseline-format error
+
+The baseline (``--baseline``, default: the committed
+``src/repro/analysis/baseline.toml``) allowlists *intentional* violations
+per (file, rule) with a count and a one-line reason.  If a file's live
+count for a rule exceeds its baselined count, the overflow is reported as
+new findings; if the live count drops below the baseline, a "stale"
+warning is printed (non-fatal) so the entry can be tightened.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+from .jitlint import apply_baseline, lint_paths, load_baseline
+
+_DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.toml"
+
+
+def _emit_baseline(findings) -> str:
+    """Render the current findings as a baseline.toml skeleton."""
+    counts: dict[tuple[str, str], int] = {}
+    for f in findings:
+        counts[(f.path, f.rule)] = counts.get((f.path, f.rule), 0) + 1
+    lines = ["# jit-safety lint baseline — every entry needs a reason.", ""]
+    for (file, rule), n in sorted(counts.items()):
+        lines += [
+            "[[baseline]]",
+            f'file = "{file}"',
+            f'rule = "{rule}"',
+            f"count = {n}",
+            'reason = "TODO: justify or fix"',
+            "",
+        ]
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific jit-safety AST lint.",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--baseline", type=Path, default=_DEFAULT_BASELINE,
+                    help="baseline TOML path (default: committed baseline)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--emit-baseline", action="store_true",
+                    help="print a baseline.toml covering current findings")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as a JSON array")
+    args = ap.parse_args(argv)
+
+    paths = [Path(p) for p in (args.paths or ["src"])]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"error: no such path: {', '.join(map(str, missing))}",
+              file=sys.stderr)
+        return 2
+
+    findings = lint_paths(paths)
+
+    if args.emit_baseline:
+        print(_emit_baseline(findings))
+        return 0
+
+    stale: list[str] = []
+    if not args.no_baseline:
+        if args.baseline.exists():
+            try:
+                entries = load_baseline(args.baseline)
+            except ValueError as e:
+                print(f"error: bad baseline {args.baseline}: {e}",
+                      file=sys.stderr)
+                return 2
+            findings, stale = apply_baseline(findings, entries)
+        elif args.baseline != _DEFAULT_BASELINE:
+            print(f"error: baseline not found: {args.baseline}",
+                  file=sys.stderr)
+            return 2
+
+    if args.as_json:
+        print(json.dumps([dataclasses.asdict(f) for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(str(f))
+        for s in stale:
+            print(f"warning: stale {s}", file=sys.stderr)
+        if findings:
+            n = len(findings)
+            print(f"\n{n} new finding{'s' if n != 1 else ''} "
+                  "(fix, or baseline with a reason)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

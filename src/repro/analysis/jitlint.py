@@ -1,0 +1,642 @@
+"""jit-safety lint: an AST analysis pass over the repo's hot paths.
+
+JAX's tracing model makes a specific bug class *silent*: code that is
+perfectly legal Python but wrong (or a performance cliff) inside a jitted
+computation.  This repo has been bitten before — the int64 scratch store in
+the `link_contention` kernel (PR 1) no-op'd through exactly the pattern
+rule 1 catches.  The rules are repo-specific, not generic style:
+
+  discarded-at-update   ``x.at[i].set(v)`` (or ``.add/.max/.min/.mul/
+                        .divide/.power/.apply``) used as a statement — JAX
+                        arrays are immutable, so the un-assigned result is
+                        a silent no-op.
+  host-sync-in-jit      ``.item()``, ``.tolist()``, ``.block_until_ready()``,
+                        ``np.asarray``/``np.array``, ``jax.device_get``, or
+                        ``int()/float()/bool()`` on a non-literal — inside
+                        a function *reachable from a jit/scan body* (the
+                        call graph is computed from the module ASTs: scan/
+                        while_loop/cond/fori_loop body functions, ``jax.jit``
+                        call sites and decorators are the roots).  Under
+                        trace these either fail or force a blocking
+                        device→host transfer per call.
+  traced-truthiness     ``if x:`` / ``while x:`` where ``x`` flows from a
+                        ``jnp`` op inside a jit-reachable function —
+                        a guaranteed ``TracerBoolConversionError`` at jit
+                        time, but only on the branch that traces it.
+  np-in-scan            any ``np.*`` call inside a jit-reachable function
+                        of ``core/engine.py`` or ``core/streaming.py`` —
+                        the two modules whose scan callees must stay pure
+                        jnp (a numpy op in a scan body constant-folds the
+                        traced value or breaks the trace).
+  kernel-signature      each ``kernels/*/kernel.py`` public entry must
+                        match its ``ref.py`` oracle's positional signature
+                        and be wrapped by ``ops.py`` — the dispatch
+                        contract that keeps oracle equality tests honest.
+
+The pass is *static over-approximation kept deliberately tight*: call
+edges resolve only through same-module scopes, explicit ``from X import
+f`` bindings, and module-alias attribute calls (``link_layer.f(...)``), so
+reachability never guesses across unrelated same-named functions.  What it
+cannot prove it does not flag; what it flags and a human has judged
+intentional lives in ``baseline.toml`` with a one-line reason, and
+`apply_baseline` fails anything beyond the committed counts.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+
+AT_UPDATE_METHODS = frozenset(
+    {"set", "add", "max", "min", "mul", "multiply", "divide", "power",
+     "apply", "get"})
+HOST_SYNC_ATTRS = frozenset({"item", "tolist", "block_until_ready"})
+NP_SYNC_FUNCS = frozenset({"asarray", "array"})
+SCALARIZERS = frozenset({"int", "float", "bool"})
+NP_SCAN_MODULES = ("repro.core.engine", "repro.core.streaming")
+
+# (callable dotted-name suffix) -> positional indices of function operands
+_TRACE_ENTRY_ARGS = {
+    "lax.scan": (0,),
+    "lax.while_loop": (0, 1),
+    "lax.cond": (1, 2),
+    "lax.fori_loop": (2,),
+    "lax.associative_scan": (0,),
+    "jax.jit": (0,),
+    "jax.vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.grad": (0,),
+    "jax.checkpoint": (0,),
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str     # repo-relative posix path
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class _Func:
+    module: "_Module"
+    qualname: str
+    node: ast.AST                  # FunctionDef / AsyncFunctionDef / Lambda
+    parent: "_Func | None"
+    children: dict                 # name -> _Func (direct defs only)
+    calls: list                    # ast.Call nodes in this body (not nested)
+    reachable: bool = False
+    root_reason: str = ""
+
+
+class _Module:
+    def __init__(self, path: Path, rel: str, name: str, tree: ast.Module):
+        self.path = path
+        self.rel = rel
+        self.name = name
+        self.is_pkg = path.name == "__init__.py"
+        self.tree = tree
+        self.funcs: dict[int, _Func] = {}       # id(node) -> _Func
+        self.top: dict[str, _Func] = {}          # module-level defs
+        self.aliases: dict[str, str] = {}        # alias -> module fullname
+        self.from_imports: dict[str, tuple[str, str]] = {}  # name -> (mod, orig)
+
+
+def _module_name(path: Path, root: Path) -> str:
+    try:
+        rel = path.relative_to(root).with_suffix("")
+    except ValueError:
+        rel = Path(path.parent.name) / path.with_suffix("").name
+    parts = list(rel.parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _resolve_relative(module: str, level: int, target: str | None,
+                      is_pkg: bool) -> str:
+    # Module names never include "__init__": a package's own name is its
+    # package, a plain module's package is its parent.
+    base = module.split(".") if is_pkg else module.split(".")[:-1]
+    if level > 1:
+        base = base[: len(base) - (level - 1)]
+    return ".".join(base + ([target] if target else []))
+
+
+class _Collector(ast.NodeVisitor):
+    """One pass per module: function index, import maps, call lists."""
+
+    def __init__(self, mod: _Module):
+        self.mod = mod
+        self.stack: list[_Func] = []
+
+    def _add_func(self, name: str, node) -> _Func:
+        parent = self.stack[-1] if self.stack else None
+        qual = (parent.qualname + "." + name) if parent else name
+        f = _Func(self.mod, qual, node, parent, {}, [])
+        self.mod.funcs[id(node)] = f
+        if parent is None:
+            self.mod.top[name] = f
+        else:
+            parent.children[name] = f
+        return f
+
+    def _walk_func(self, f: _Func, body):
+        self.stack.append(f)
+        for stmt in body:
+            self.visit(stmt)
+        self.stack.pop()
+
+    def visit_Import(self, node):
+        for a in node.names:
+            self.mod.aliases[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+
+    def visit_ImportFrom(self, node):
+        src = (_resolve_relative(self.mod.name, node.level, node.module,
+                                 self.mod.is_pkg)
+               if node.level else (node.module or ""))
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.mod.from_imports[a.asname or a.name] = (src, a.name)
+
+    def visit_FunctionDef(self, node):
+        f = self._add_func(node.name, node)
+        for d in node.decorator_list:
+            self.visit(d)
+        self._walk_func(f, node.body)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        f = self._add_func(f"<lambda:{node.lineno}>", node)
+        self.stack.append(f)
+        self.visit(node.body)
+        self.stack.pop()
+
+    def visit_Call(self, node):
+        if self.stack:
+            self.stack[-1].calls.append(node)
+        self.generic_visit(node)
+
+
+def _dotted(node) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Linter:
+    def __init__(self, files: list[Path], repo_root: Path):
+        self.repo_root = repo_root
+        self.modules: list[_Module] = []
+        self.by_name: dict[str, _Module] = {}
+        self.findings: list[Finding] = []
+        for p in sorted(files):
+            try:
+                tree = ast.parse(p.read_text(), filename=str(p))
+            except SyntaxError as e:
+                self._emit(p, e.lineno or 0, "syntax-error", str(e.msg))
+                continue
+            rel = p.relative_to(repo_root).as_posix() \
+                if p.is_relative_to(repo_root) else p.as_posix()
+            mod = _Module(p, rel, _module_name(p, repo_root), tree)
+            _Collector(mod).visit(tree)
+            self.modules.append(mod)
+            self.by_name[mod.name] = mod
+
+    def _emit(self, path, line, rule, message):
+        rel = (path.relative_to(self.repo_root).as_posix()
+               if isinstance(path, Path) and path.is_relative_to(self.repo_root)
+               else str(path))
+        self.findings.append(Finding(rel, int(line), rule, message))
+
+    # -- call resolution ---------------------------------------------------
+
+    def _resolve_name(self, mod: _Module, scope: _Func | None,
+                      name: str) -> _Func | None:
+        s = scope
+        while s is not None:
+            if name in s.children:
+                return s.children[name]
+            s = s.parent
+        if name in mod.top:
+            return mod.top[name]
+        if name in mod.from_imports:
+            src, orig = mod.from_imports[name]
+            target = self.by_name.get(src)
+            if target is not None:
+                return target.top.get(orig)
+        return None
+
+    def _resolve_call(self, mod: _Module, scope: _Func | None,
+                      func_expr) -> _Func | None:
+        if isinstance(func_expr, ast.Name):
+            return self._resolve_name(mod, scope, func_expr.id)
+        if isinstance(func_expr, ast.Attribute) and \
+                isinstance(func_expr.value, ast.Name):
+            alias = func_expr.value.id
+            target_name = None
+            if alias in mod.from_imports:          # from repro.core import x
+                src, orig = mod.from_imports[alias]
+                target_name = src + "." + orig
+            elif alias in mod.aliases:             # import repro.core as x
+                target_name = mod.aliases[alias]
+            if target_name is not None:
+                target = self.by_name.get(target_name)
+                if target is not None:
+                    return target.top.get(func_expr.attr)
+        return None
+
+    # -- jit-root discovery + reachability ---------------------------------
+
+    def _mark_roots(self):
+        for mod in self.modules:
+            # decorator roots: @jax.jit / @jit / @partial(jax.jit, ...)
+            for f in mod.funcs.values():
+                node = f.node
+                for d in getattr(node, "decorator_list", ()):
+                    expr = d.func if isinstance(d, ast.Call) else d
+                    name = _dotted(expr) or ""
+                    inner = ""
+                    if isinstance(d, ast.Call) and name.endswith("partial") \
+                            and d.args:
+                        inner = _dotted(d.args[0]) or ""
+                    for cand in (name, inner):
+                        if cand in ("jit", "jax.jit", "pjit", "jax.pjit") or \
+                                cand.endswith(".jit"):
+                            f.reachable = True
+                            f.root_reason = f"@{cand}"
+            # call-site roots: functions handed to scan/while/cond/jit/vmap
+            for f in list(mod.funcs.values()) + [None]:
+                calls = (f.calls if f is not None else
+                         [n for n in ast.walk(mod.tree)
+                          if isinstance(n, ast.Call)
+                          and id(n) not in self._calls_in_funcs(mod)])
+                for call in calls:
+                    name = _dotted(call.func) or ""
+                    for suffix, arg_ix in _TRACE_ENTRY_ARGS.items():
+                        if not (name == suffix or name.endswith("." + suffix)
+                                or ("." in suffix
+                                    and name == suffix.split(".")[-1])):
+                            continue
+                        for i in arg_ix:
+                            if i >= len(call.args):
+                                continue
+                            arg = call.args[i]
+                            target = None
+                            if isinstance(arg, (ast.Lambda,)):
+                                target = mod.funcs.get(id(arg))
+                            elif isinstance(arg, ast.Name):
+                                target = self._resolve_name(mod, f, arg.id)
+                            if target is not None and not target.reachable:
+                                target.reachable = True
+                                target.root_reason = f"passed to {name}"
+
+    def _calls_in_funcs(self, mod: _Module) -> set[int]:
+        ids: set[int] = set()
+        for f in mod.funcs.values():
+            ids.update(id(c) for c in f.calls)
+        return ids
+
+    def _propagate(self):
+        work = [f for mod in self.modules for f in mod.funcs.values()
+                if f.reachable]
+        seen = {id(f.node) for f in work}
+        while work:
+            f = work.pop()
+            for call in f.calls:
+                target = self._resolve_call(f.module, f, call.func)
+                if target is not None and id(target.node) not in seen:
+                    seen.add(id(target.node))
+                    target.reachable = True
+                    target.root_reason = (
+                        f"called from {f.qualname} ({f.root_reason})")
+                    work.append(target)
+
+    # -- rules -------------------------------------------------------------
+
+    def _rule_discarded_at(self):
+        for mod in self.modules:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Expr):
+                    continue
+                call = node.value
+                if not (isinstance(call, ast.Call)
+                        and isinstance(call.func, ast.Attribute)
+                        and call.func.attr in AT_UPDATE_METHODS):
+                    continue
+                base = call.func.value
+                if isinstance(base, ast.Subscript) and \
+                        isinstance(base.value, ast.Attribute) and \
+                        base.value.attr == "at":
+                    self._emit(mod.path, node.lineno, "discarded-at-update",
+                               f".at[...].{call.func.attr}(...) result "
+                               "discarded — JAX arrays are immutable, this "
+                               "is a silent no-op")
+
+    def _rule_host_sync(self):
+        for mod in self.modules:
+            in_scan_mod = mod.name in NP_SCAN_MODULES
+            for f in mod.funcs.values():
+                if not f.reachable:
+                    continue
+                for call in f.calls:
+                    name = _dotted(call.func) or ""
+                    where = f"in jit-reachable {f.qualname} ({f.root_reason})"
+                    if isinstance(call.func, ast.Attribute) and \
+                            call.func.attr in HOST_SYNC_ATTRS and \
+                            not name.startswith(("np.", "numpy.")):
+                        self._emit(mod.path, call.lineno, "host-sync-in-jit",
+                                   f".{call.func.attr}() {where} forces a "
+                                   "device sync under trace")
+                        continue
+                    if name.split(".")[0] in ("np", "numpy"):
+                        attr = name.split(".", 1)[1] if "." in name else ""
+                        if attr in NP_SYNC_FUNCS:
+                            self._emit(mod.path, call.lineno,
+                                       "host-sync-in-jit",
+                                       f"{name}() {where} pulls the traced "
+                                       "value to the host")
+                        elif in_scan_mod:
+                            self._emit(mod.path, call.lineno, "np-in-scan",
+                                       f"{name}() {where} — engine/streaming "
+                                       "scan callees must stay pure jnp")
+                        continue
+                    if name in ("jax.device_get",):
+                        self._emit(mod.path, call.lineno, "host-sync-in-jit",
+                                   f"{name}() {where}")
+                        continue
+                    if isinstance(call.func, ast.Name) and \
+                            call.func.id in SCALARIZERS and \
+                            len(call.args) == 1 and not call.keywords and \
+                            self._test_is_traced(
+                                call.args[0], self._tracked_names(f)):
+                        self._emit(mod.path, call.lineno, "host-sync-in-jit",
+                                   f"{call.func.id}(...) on a jnp-derived "
+                                   f"value {where} concretizes a traced "
+                                   "value")
+
+    def _rule_traced_truthiness(self):
+        for mod in self.modules:
+            for f in mod.funcs.values():
+                if not f.reachable or not isinstance(
+                        f.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                tracked = self._tracked_names(f)
+                if not tracked:
+                    continue
+                for node in self._own_nodes(f):
+                    if not isinstance(node, (ast.If, ast.While)):
+                        continue
+                    if self._test_is_traced(node.test, tracked):
+                        self._emit(mod.path, node.lineno,
+                                   "traced-truthiness",
+                                   "Python truthiness on a value that flows "
+                                   f"from a jnp op, in jit-reachable "
+                                   f"{f.qualname} — raises "
+                                   "TracerBoolConversionError under trace")
+
+    def _own_nodes(self, f: _Func):
+        """All AST nodes of a function body, not descending into nested
+        function definitions (they have their own _Func records)."""
+        body = getattr(f.node, "body", [])
+        stack = list(body) if isinstance(body, list) else [body]
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _tracked_names(self, f: _Func) -> set[str]:
+        """Names assigned (transitively) from a jnp op inside this body."""
+        tracked: set[str] = set()
+        for node in self._own_nodes(f):
+            if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                continue
+            value = node.value
+            is_jnp = False
+            for sub in ast.walk(value):
+                if isinstance(sub, ast.Call):
+                    name = _dotted(sub.func) or ""
+                    if name.split(".")[0] == "jnp":
+                        is_jnp = True
+                elif isinstance(sub, ast.Name) and sub.id in tracked:
+                    is_jnp = True
+            if not is_jnp:
+                continue
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        tracked.add(sub.id)
+        return tracked
+
+    # Attribute reads that stay static under trace (safe in `if`):
+    _STATIC_ATTRS = frozenset(
+        {"shape", "ndim", "dtype", "size", "at", "weak_type", "sharding"})
+
+    def _test_is_traced(self, test, tracked: set[str]) -> bool:
+        if isinstance(test, ast.Name):
+            return test.id in tracked
+        if isinstance(test, ast.UnaryOp):
+            return self._test_is_traced(test.operand, tracked)
+        if isinstance(test, ast.BoolOp):
+            return any(self._test_is_traced(v, tracked) for v in test.values)
+        if isinstance(test, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in test.ops):
+                return False  # identity/membership checks are static
+            return (self._test_is_traced(test.left, tracked)
+                    or any(self._test_is_traced(c, tracked)
+                           for c in test.comparators))
+        if isinstance(test, ast.BinOp):
+            return (self._test_is_traced(test.left, tracked)
+                    or self._test_is_traced(test.right, tracked))
+        if isinstance(test, ast.Subscript):
+            return self._test_is_traced(test.value, tracked)
+        if isinstance(test, ast.Attribute):
+            if test.attr in self._STATIC_ATTRS:
+                return False
+            return self._test_is_traced(test.value, tracked)
+        if isinstance(test, ast.Call):
+            name = _dotted(test.func) or ""
+            if name.split(".")[0] == "jnp":
+                return True
+            if isinstance(test.func, ast.Attribute):
+                # method on a tracked value: x.sum(), x.any(), ...
+                return self._test_is_traced(test.func.value, tracked)
+        return False
+
+    # -- kernel signature cross-check --------------------------------------
+
+    def _rule_kernel_signatures(self):
+        pkgs: dict[str, dict[str, _Module]] = {}
+        for mod in self.modules:
+            parts = mod.name.split(".")
+            if len(parts) >= 3 and parts[-3] == "kernels" and \
+                    parts[-1] in ("kernel", "ref", "ops"):
+                pkgs.setdefault(".".join(parts[:-1]), {})[parts[-1]] = mod
+        for pkg, mods in sorted(pkgs.items()):
+            if set(mods) != {"kernel", "ref", "ops"}:
+                missing = {"kernel", "ref", "ops"} - set(mods)
+                anymod = next(iter(mods.values()))
+                self._emit(anymod.path, 1, "kernel-signature",
+                           f"kernel package {pkg} is missing "
+                           f"{sorted(missing)} modules")
+                continue
+            self._check_kernel_pkg(pkg, mods)
+
+    @staticmethod
+    def _positional(node) -> list[str]:
+        a = node.args
+        return [x.arg for x in list(a.posonlyargs) + list(a.args)]
+
+    def _check_kernel_pkg(self, pkg: str, mods: dict[str, _Module]):
+        kmod, rmod, omod = mods["kernel"], mods["ref"], mods["ops"]
+        refs = {n: f for n, f in rmod.top.items()
+                if n.endswith("_ref") and not n.startswith("_")}
+        if len(refs) != 1:
+            self._emit(rmod.path, 1, "kernel-signature",
+                       f"{pkg}/ref.py must expose exactly one public "
+                       f"*_ref oracle, found {sorted(refs) or 'none'}")
+            return
+        (ref_name, ref_f), = refs.items()
+        base = ref_name[: -len("_ref")]
+        entries = {n: f for n, f in kmod.top.items()
+                   if not n.startswith("_") and n.startswith(base)}
+        if len(entries) != 1:
+            self._emit(kmod.path, 1, "kernel-signature",
+                       f"{pkg}/kernel.py must expose exactly one public "
+                       f"entry named {base}* matching {ref_name}, found "
+                       f"{sorted(entries) or 'none'}")
+            return
+        (k_name, k_f), = entries.items()
+        kp, rp = self._positional(k_f.node), self._positional(ref_f.node)
+        if kp != rp:
+            self._emit(kmod.path, k_f.node.lineno, "kernel-signature",
+                       f"{k_name}{tuple(kp)} positional signature differs "
+                       f"from oracle {ref_name}{tuple(rp)} — oracle "
+                       "equality tests cannot swap implementations")
+        imported = {orig for (src, orig) in omod.from_imports.values()
+                    if src in (kmod.name, rmod.name)}
+        for need in (k_name, ref_name):
+            if need not in imported:
+                self._emit(omod.path, 1, "kernel-signature",
+                           f"{pkg}/ops.py does not import {need} — every "
+                           "kernel entry must be wrapped by its ops "
+                           "dispatcher")
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self) -> list[Finding]:
+        self._mark_roots()
+        self._propagate()
+        self._rule_discarded_at()
+        self._rule_host_sync()
+        self._rule_traced_truthiness()
+        self._rule_kernel_signatures()
+        self.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+        return self.findings
+
+
+def lint_paths(paths, repo_root: str | Path | None = None) -> list[Finding]:
+    """Lint every ``*.py`` under ``paths`` (files or directories)."""
+    root = Path(repo_root).resolve() if repo_root else Path.cwd().resolve()
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p).resolve()
+        if p.is_dir():
+            files.extend(q for q in p.rglob("*.py")
+                         if "__pycache__" not in q.parts)
+        else:
+            files.append(p)
+    return Linter(files, root).run()
+
+
+# ---------------------------------------------------------------------------
+# Baseline: committed allowlist of intentional findings
+# ---------------------------------------------------------------------------
+
+def _parse_toml_minimal(text: str) -> dict:
+    """Tiny TOML-subset reader for ``baseline.toml`` (py3.10 has no
+    tomllib): ``[[baseline]]`` tables of ``key = value`` scalars only."""
+    out: dict = {"baseline": []}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].strip() if not raw.strip().startswith(
+            '"') else raw.strip()
+        if not line:
+            continue
+        if line == "[[baseline]]":
+            cur = {}
+            out["baseline"].append(cur)
+            continue
+        if "=" in line and cur is not None:
+            key, _, val = line.partition("=")
+            val = val.strip()
+            if val.startswith('"') and val.endswith('"'):
+                cur[key.strip()] = val[1:-1]
+            else:
+                cur[key.strip()] = int(val)
+    return out
+
+
+def load_baseline(path: str | Path) -> list[dict]:
+    text = Path(path).read_text()
+    try:
+        import tomllib
+        data = tomllib.loads(text)
+    except ModuleNotFoundError:
+        data = _parse_toml_minimal(text)
+    entries = data.get("baseline", [])
+    for e in entries:
+        for key in ("file", "rule", "count", "reason"):
+            if key not in e:
+                raise ValueError(f"baseline entry missing {key!r}: {e}")
+    return entries
+
+
+def apply_baseline(findings: list[Finding], entries: list[dict]
+                   ) -> tuple[list[Finding], list[str]]:
+    """Split findings into (new, stale-baseline messages).
+
+    A finding is *baselined* when a ``(file, rule)`` entry covers it and
+    the per-entry count is not exceeded; everything past the committed
+    count — or with no entry at all — is new and should fail the build.
+    Entries whose violation count dropped come back as stale warnings so
+    the allowlist shrinks with the code.
+    """
+    allowed: dict[tuple[str, str], int] = {}
+    for e in entries:
+        allowed[(e["file"], e["rule"])] = \
+            allowed.get((e["file"], e["rule"]), 0) + int(e["count"])
+    counts: dict[tuple[str, str], int] = {}
+    new: list[Finding] = []
+    for f in findings:
+        key = (f.path, f.rule)
+        counts[key] = counts.get(key, 0) + 1
+        if counts[key] > allowed.get(key, 0):
+            new.append(f)
+    stale = [f"baseline entry {key[0]} [{key[1]}] allows {cap} but only "
+             f"{counts.get(key, 0)} found — shrink the baseline"
+             for key, cap in sorted(allowed.items())
+             if counts.get(key, 0) < cap]
+    return new, stale

@@ -45,6 +45,11 @@ from . import streaming  # noqa: E402,F401
 from .streaming import (  # noqa: E402,F401
     StreamResult, StreamState, simulate_stream, stream_windows,
 )
+from . import verify  # noqa: E402,F401
+from .verify import (  # noqa: E402,F401
+    Finding, VerifyError, VerifyReport, assert_valid, verify_built,
+    verify_workload,
+)
 from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
 from . import telemetry, trace_export  # noqa: E402,F401
 from .telemetry import (  # noqa: E402,F401

@@ -512,7 +512,7 @@ def replay_round(hops: Hops, channels: Channels, sched: Schedule):
 # ---------------------------------------------------------------------------
 
 def simulate_auto(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
-                  max_rounds: int = 0, check: bool = True,
+                  max_rounds: int = 0, check: bool | str = True,
                   carry: StreamCarry | None = None) -> tuple[Schedule, bool]:
     """Exact schedule with oracle fallback.
 
@@ -529,9 +529,18 @@ def simulate_auto(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
     to the host (the streaming driver does, every window, for carry
     extraction) use it to keep the window pipeline transfer-free and run
     their own fallback; the returned schedule may then be unconverged.
+    ``check="static"`` additionally runs the fabric-IR verifier
+    (`core.verify`) over the lowered triple *before* tracing anything and
+    raises `verify.VerifyError` on any contract violation — the
+    belt-and-braces mode for tables a third-party lowering produced.
     ``carry`` threads streaming window state into both the fixpoint and the
     oracle fallback.
     """
+    if check == "static":
+        from . import verify  # local import: host-side checker only
+
+        verify.assert_valid(hops, channels, issue_ps, carry=carry)
+        check = True
     sched = simulate(hops, channels, issue_ps, max_rounds=max_rounds,
                      carry=carry)
     if not check:

@@ -57,7 +57,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from . import ref_des
+from . import ref_des, verify
 from .engine import Channels, Hops, StreamCarry, simulate
 from .telemetry import (StreamTelemetry, stream_telemetry_finalize,
                         stream_telemetry_fold, stream_telemetry_new)
@@ -127,9 +127,7 @@ def _min_issue(issue) -> int:
     return int(np.min(np.asarray(issue)))
 
 
-def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
-                    ck_issue, t_next: int, max_rounds: int, pad_to: int,
-                    oracle_fallback: bool, collect: dict | None) -> None:
+def _ensure_layout(state: StreamState, ck_hops: Hops) -> tuple:
     layout = (ck_hops.extra_wire_bytes is not None,
               ck_hops.retrain_after_ps is not None,
               ck_hops.join_id is not None)
@@ -138,7 +136,13 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
     elif state.layout != layout:
         raise ValueError("all chunks must share one optional-field layout; "
                          f"got {layout} after {state.layout}")
-    has_extra, has_retrain, has_join = layout
+    return layout
+
+
+def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
+                    ck_issue, t_next: int, max_rounds: int, pad_to: int,
+                    oracle_fallback: bool, collect: dict | None) -> None:
+    has_extra, has_retrain, has_join = _ensure_layout(state, ck_hops)
 
     c_np = {f: _np(getattr(ck_hops, f)) for f in _BASE_FIELDS}
     if has_extra:
@@ -383,7 +387,8 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
 def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
                     max_rounds: int = 0, pad_to: int = 64,
                     oracle_fallback: bool = True,
-                    collect_schedule: bool = False) -> StreamResult:
+                    collect_schedule: bool = False,
+                    static_check: bool = True) -> StreamResult:
     """Drive a chunked trace through windowed simulation (module docstring).
 
     chunks    iterator/iterable of ``(Hops, issue_ps)`` — e.g.
@@ -400,6 +405,13 @@ def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
               accumulate every settled item's (start, depart, arrive) and
               every row's completion/gated-arrival in global coordinates —
               the equivalence-test hook; O(trace) memory, test scale only.
+    static_check
+              run the fabric-IR verifier (`core.verify`) over every
+              incoming chunk before it enters a window — the settlement
+              rule and carry extraction silently mis-settle on tables that
+              break the engine contracts, so chunks from third-party
+              lowerings are checked at the door (host-side numpy, a few
+              percent of window cost).  Raises `verify.VerifyError`.
 
     Returns `StreamResult`; tail quantiles via ``result.summary()``.
     """
@@ -416,6 +428,12 @@ def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
         if int(np.asarray(cur[1]).shape[0]) == 0:
             cur = nxt
             continue
+        # layout mismatch is a caller error with a specific remedy — report
+        # it as such rather than as whatever IR findings the odd chunk
+        # happens to produce against the shared channel tables
+        _ensure_layout(state, cur[0])
+        if static_check:
+            verify.assert_valid(cur[0], channels, cur[1])
         mn = _min_issue(cur[1])
         if prev_min is not None and mn < prev_min:
             raise ValueError(

@@ -57,12 +57,12 @@ class Server:
                 # splice the single-sequence cache into slot s: stage-stacked
                 # leaves are (stages, B, ...), tail leaves are (B, ...)
                 self.cache["stages"] = jax.tree.map(
-                    lambda full, one: full.at[:, s:s + 1].set(
+                    lambda full, one, s=s: full.at[:, s:s + 1].set(
                         one.astype(full.dtype)),
                     self.cache["stages"], cache1["stages"])
                 if "tail" in self.cache:
                     self.cache["tail"] = jax.tree.map(
-                        lambda full, one: full.at[s:s + 1].set(
+                        lambda full, one, s=s: full.at[s:s + 1].set(
                             one.astype(full.dtype)),
                         self.cache["tail"], cache1["tail"])
                 nxt = self._sample(logits[:, 0])

@@ -1,0 +1,259 @@
+"""jit-safety lint: every rule fires on a seeded-bad fixture, stays quiet
+on the equivalent-but-correct code, the baseline mechanism admits exactly
+the committed counts, and the real source tree is clean under the
+committed baseline (the CI gate, run in-process)."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.jitlint import (apply_baseline, lint_paths,
+                                    load_baseline)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lint_src(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return lint_paths([p], repo_root=tmp_path)
+
+
+BAD = """\
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        x.at[0].set(1)
+        y = jnp.cumsum(x)
+        if y > 0:
+            y = -y
+        v = int(y)
+        w = x.item()
+        z = np.asarray(y)
+        return v + w + z
+
+    def body(c, x):
+        q = float(jnp.sum(x))
+        return c, q
+
+    def run(xs):
+        return jax.lax.scan(body, 0, xs)
+"""
+
+GOOD = """\
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x, flag=True):
+        x = x.at[0].set(1)            # result assigned: fine
+        y = jnp.cumsum(x)
+        if flag:                      # static python bool: fine
+            y = -y
+        if x.shape[0] > 2:            # shapes are static: fine
+            y = y + 1
+        return jnp.where(y > 0, y, -y)
+
+    def host(x):
+        return int(jnp.sum(x))        # not jit-reachable: fine
+"""
+
+
+def test_all_rules_fire_on_bad_fixture(tmp_path):
+    rules = {f.rule for f in _lint_src(tmp_path, BAD)}
+    assert "discarded-at-update" in rules
+    assert "traced-truthiness" in rules
+    assert "host-sync-in-jit" in rules
+
+
+def test_bad_fixture_finding_lines(tmp_path):
+    fs = _lint_src(tmp_path, BAD)
+    by_rule = {}
+    for f in fs:
+        by_rule.setdefault(f.rule, []).append(f.line)
+    assert by_rule["discarded-at-update"] == [7]
+    assert by_rule["traced-truthiness"] == [9]
+    # int(), .item(), np.asarray() in f; float() reachable via lax.scan
+    assert sorted(by_rule["host-sync-in-jit"]) == [11, 12, 13, 17]
+
+
+def test_good_fixture_is_clean(tmp_path):
+    assert _lint_src(tmp_path, GOOD) == []
+
+
+def test_unreachable_host_code_not_flagged(tmp_path):
+    fs = _lint_src(tmp_path, """\
+        import numpy as np
+
+        def driver(arrays):
+            # plain host-side python: every construct the lint hunts for,
+            # but nothing is jit-reachable
+            total = int(np.asarray(arrays[0]).sum())
+            if total > 0:
+                total = float(total)
+            return total
+    """)
+    assert fs == []
+
+
+def test_np_in_scan_rule_is_module_scoped(tmp_path):
+    src = """\
+        import jax
+        import numpy as np
+
+        def body(c, x):
+            y = np.log2(x)
+            return c, y
+
+        def run(xs):
+            return jax.lax.scan(body, 0, xs)
+    """
+    # outside the engine/streaming modules: np.log2 is not a sync call,
+    # so nothing fires
+    assert _lint_src(tmp_path, src) == []
+    # under a hot-path module name the same code violates the pure-jnp
+    # contract
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    p = pkg / "engine.py"
+    p.write_text(textwrap.dedent(src))
+    fs = lint_paths([p], repo_root=tmp_path)
+    assert [f.rule for f in fs] == ["np-in-scan"]
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    fs = _lint_src(tmp_path, "def f(:\n")
+    assert [f.rule for f in fs] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanism
+# ---------------------------------------------------------------------------
+
+def _baseline(tmp_path, entries):
+    text = ""
+    for file, rule, count, reason in entries:
+        text += ("[[baseline]]\n"
+                 f'file = "{file}"\nrule = "{rule}"\n'
+                 f'count = {count}\nreason = "{reason}"\n\n')
+    p = tmp_path / "baseline.toml"
+    p.write_text(text or "baseline = []\n")
+    return p
+
+
+def test_baseline_admits_committed_counts(tmp_path):
+    fs = _lint_src(tmp_path, BAD)
+    host = [f for f in fs if f.rule == "host-sync-in-jit"]
+    bl = load_baseline(_baseline(tmp_path, [
+        ("mod.py", "host-sync-in-jit", len(host), "fixture"),
+        ("mod.py", "discarded-at-update", 1, "fixture"),
+        ("mod.py", "traced-truthiness", 1, "fixture"),
+    ]))
+    new, stale = apply_baseline(fs, bl)
+    assert new == [] and stale == []
+
+
+def test_removing_baseline_entry_resurfaces_finding(tmp_path):
+    fs = _lint_src(tmp_path, BAD)
+    bl = load_baseline(_baseline(tmp_path, [
+        ("mod.py", "host-sync-in-jit", 4, "fixture"),
+        ("mod.py", "traced-truthiness", 1, "fixture"),
+        # discarded-at-update entry removed while the violation remains
+    ]))
+    new, _ = apply_baseline(fs, bl)
+    assert [f.rule for f in new] == ["discarded-at-update"]
+
+
+def test_exceeding_baseline_count_fails(tmp_path):
+    fs = _lint_src(tmp_path, BAD)
+    bl = load_baseline(_baseline(tmp_path, [
+        ("mod.py", "host-sync-in-jit", 2, "only two admitted"),
+        ("mod.py", "discarded-at-update", 1, "fixture"),
+        ("mod.py", "traced-truthiness", 1, "fixture"),
+    ]))
+    new, _ = apply_baseline(fs, bl)
+    assert [f.rule for f in new] == ["host-sync-in-jit"] * 2
+
+
+def test_stale_baseline_entry_warns(tmp_path):
+    fs = _lint_src(tmp_path, GOOD)
+    bl = load_baseline(_baseline(tmp_path, [
+        ("mod.py", "host-sync-in-jit", 3, "no longer true"),
+    ]))
+    new, stale = apply_baseline(fs, bl)
+    assert new == [] and len(stale) == 1
+
+
+def test_baseline_requires_reason(tmp_path):
+    p = tmp_path / "b.toml"
+    p.write_text('[[baseline]]\nfile = "x.py"\nrule = "r"\ncount = 1\n')
+    with pytest.raises(ValueError, match="reason"):
+        load_baseline(p)
+
+
+# ---------------------------------------------------------------------------
+# kernel signature cross-check
+# ---------------------------------------------------------------------------
+
+def _kernel_pkg(tmp_path, ref_sig="a, b", kernel_sig="a, b",
+                ops_imports=("dummy_pallas", "dummy_ref")):
+    pkg = tmp_path / "src" / "repro" / "kernels" / "dummy"
+    pkg.mkdir(parents=True)
+    (pkg / "ref.py").write_text(f"def dummy_ref({ref_sig}):\n    return a\n")
+    (pkg / "kernel.py").write_text(
+        f"def dummy_pallas({kernel_sig}):\n    return a\n")
+    (pkg / "ops.py").write_text(
+        "from .kernel import {}\nfrom .ref import {}\n".format(*ops_imports))
+    return list(pkg.glob("*.py"))
+
+
+def test_kernel_signatures_match_ok(tmp_path):
+    fs = lint_paths(_kernel_pkg(tmp_path), repo_root=tmp_path)
+    assert fs == []
+
+
+def test_kernel_signature_mismatch_flagged(tmp_path):
+    fs = lint_paths(_kernel_pkg(tmp_path, ref_sig="a, b", kernel_sig="a, c"),
+                    repo_root=tmp_path)
+    assert [f.rule for f in fs] == ["kernel-signature"]
+
+
+def test_kernel_ops_must_wrap_entry(tmp_path):
+    fs = lint_paths(_kernel_pkg(tmp_path, ops_imports=("dummy_pallas",
+                                                       "unrelated")),
+                    repo_root=tmp_path)
+    assert [f.rule for f in fs] == ["kernel-signature"]
+
+
+# ---------------------------------------------------------------------------
+# the real tree under the committed baseline (the CI gate, in-process)
+# ---------------------------------------------------------------------------
+
+def test_repo_src_clean_under_committed_baseline():
+    findings = lint_paths([REPO / "src"], repo_root=REPO)
+    entries = load_baseline(REPO / "src" / "repro" / "analysis" /
+                            "baseline.toml")
+    new, _ = apply_baseline(findings, entries)
+    assert new == [], "\n".join(map(str, new))
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(BAD))
+    env_ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert env_ok.returncode == 0, env_ok.stdout + env_ok.stderr
+    env_bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(bad), "--no-baseline"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert env_bad.returncode == 1
+    assert "discarded-at-update" in env_bad.stdout

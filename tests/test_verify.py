@@ -1,0 +1,288 @@
+"""Fabric-IR verifier: seeded-invalid fixtures each produce exactly the
+typed finding they seed, and every real lowering path verifies clean.
+
+The fixtures are the PR-8 acceptance set: cyclic join graph, arity
+mismatch, out-of-range channel index, invalid carry frontier, and a
+reliability table claiming more retrain events than ``failures //
+retrain_threshold`` admits.  Each corrupts ONE invariant of an otherwise
+valid workload, so a finding with any other code is a verifier bug.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  (x64)
+from repro.core import topology as T
+from repro.core import verify
+from repro.core.coherence_traffic import (CoherenceFabricSpec,
+                                          coherence_issue, lower_coherence)
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import Channels, Hops, StreamCarry, make_channels
+from repro.core.link_layer import FlitConfig
+from repro.core.snoop_filter import (CacheConfig, SFConfig,
+                                     make_skewed_stream, simulate_sf)
+from repro.core.streaming import stream_windows
+
+from _hyp_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# hand-built fixture: a tiny valid workload the tests then corrupt
+# ---------------------------------------------------------------------------
+
+N, H, C = 4, 2, 3
+
+
+def tiny(**hops_over):
+    """4 transactions x 2 hops over 3 channels; verifies clean as-is."""
+    hops = Hops(
+        channel=jnp.asarray([[0, 1]] * N, jnp.int32),
+        nbytes=jnp.asarray([[64, 256]] * N, jnp.int64),
+        direction=jnp.zeros((N, H), jnp.int8),
+        row=jnp.full((N, H), -1, jnp.int32),
+        fixed_after_ps=jnp.full((N, H), 26_000, jnp.int64),
+        is_payload=jnp.asarray([[False, True]] * N),
+        valid=jnp.ones((N, H), bool),
+    )._replace(**hops_over)
+    channels = Channels(
+        bw_MBps=jnp.full((C,), 64_000, jnp.int64),
+        turnaround_ps=jnp.zeros((C,), jnp.int64),
+        row_hit_ps=jnp.zeros((C,), jnp.int64),
+        row_miss_ps=jnp.zeros((C,), jnp.int64),
+    )
+    issue = jnp.asarray([0, 1_000, 2_000, 3_000], jnp.int64)
+    return hops, channels, issue
+
+
+def _joins(jid, jwait, jarity):
+    return dict(join_id=jnp.asarray(jid, jnp.int32),
+                join_wait=jnp.asarray(jwait, jnp.int32),
+                join_arity=jnp.asarray(jarity, jnp.int32))
+
+
+def test_tiny_fixture_is_clean():
+    hops, ch, issue = tiny()
+    rep = verify.verify_workload(hops, ch, issue)
+    assert rep.ok and rep.findings == ()
+
+
+# ---------------------------------------------------------------------------
+# the five seeded-invalid acceptance fixtures
+# ---------------------------------------------------------------------------
+
+def test_cyclic_join_graph_flagged():
+    # group 0 waits on group 1 and feeds it via its waiter: rows 0,1 feed
+    # group 0; row 2 (waiter of 0) feeds group 1; row 3 (waiter of 1)
+    # feeds group 0 — a 2-cycle through waiters that deadlocks the oracle.
+    hops, ch, issue = tiny(**_joins(
+        jid=[0, 1, 1, 0], jwait=[1, 0, -1, -1], jarity=[2, 2, -1, -1]))
+    rep = verify.verify_workload(hops, ch, issue)
+    assert not rep.ok
+    assert set(rep.codes) == {"join.cycle"}
+
+
+def test_join_arity_mismatch_flagged():
+    # group 0 has two contributors but the waiter declares arity 3
+    hops, ch, issue = tiny(**_joins(
+        jid=[0, 0, -1, -1], jwait=[-1, -1, 0, -1], jarity=[-1, -1, 3, -1]))
+    rep = verify.verify_workload(hops, ch, issue)
+    assert not rep.ok
+    assert set(rep.codes) == {"join.arity"}
+    assert any(f.row == 2 for f in rep.findings)
+
+
+def test_channel_out_of_range_flagged():
+    hops, ch, issue = tiny()
+    bad = np.asarray(hops.channel).copy()
+    bad[2, 1] = C  # one past the last channel
+    rep = verify.verify_workload(
+        hops._replace(channel=jnp.asarray(bad)), ch, issue)
+    assert not rep.ok
+    assert set(rep.codes) == {"chan.bounds"}
+    f = next(f for f in rep.findings if f.code == "chan.bounds")
+    assert (f.row, f.hop) == (2, 1)
+
+
+def test_invalid_carry_frontier_flagged():
+    hops, ch, issue = tiny()
+    carry = StreamCarry(
+        depart_ps=jnp.asarray([0, -5, 0], jnp.int64),  # negative frontier
+        last_dir=jnp.full((C,), -1, jnp.int8),
+        last_row=jnp.full((C,), -2, jnp.int32),
+        down_until_ps=jnp.zeros((C,), jnp.int64),
+    )
+    rep = verify.verify_workload(hops, ch, issue, carry=carry)
+    assert not rep.ok
+    assert set(rep.codes) == {"carry.frontier"}
+    assert any(f.channel == 1 for f in rep.findings)
+
+
+def _rel_tables(flit_size=256, retry_window=2, retrain_threshold=2,
+                retrain_ps=1_000_000):
+    link = np.asarray([True, True, True])
+    return dict(
+        stochastic=link.copy(),
+        err_p=np.where(link, 1e-4, 0.0),
+        flit_size=np.where(link, flit_size, 0).astype(np.int64),
+        flit_payload=np.where(link, 250, 0).astype(np.int64),
+        retry_window=np.where(link, retry_window, 0).astype(np.int64),
+        retrain_threshold=np.where(link, retrain_threshold, 0)
+            .astype(np.int64),
+        retrain_ps=np.where(link, retrain_ps, 0).astype(np.int64),
+        rel_seed=np.zeros(3, np.int64),
+    )
+
+
+def test_reliability_events_exceed_failures_flagged():
+    # hop (0,1) carries 2 failures' worth of replay bytes (2 * 256 * 2
+    # wire bytes), so with retrain_threshold=2 at most ONE retrain event
+    # is admissible — claim two (retrain_after = 2 * retrain_ps).
+    extra = np.zeros((N, H), np.int64)
+    retrain = np.zeros((N, H), np.int64)
+    extra[0, 1] = 2 * 256 * 2
+    retrain[0, 1] = 2 * 1_000_000
+    hops, ch, issue = tiny(extra_wire_bytes=jnp.asarray(extra),
+                           retrain_after_ps=jnp.asarray(retrain))
+    rep = verify.verify_workload(hops, ch, issue,
+                                 reliability=_rel_tables())
+    assert not rep.ok
+    assert set(rep.codes) == {"rel.events"}
+    f = next(f for f in rep.findings if f.code == "rel.events")
+    assert (f.row, f.hop) == (0, 1)
+
+    # sanity: one admissible event verifies clean
+    retrain[0, 1] = 1_000_000
+    hops2, _, _ = tiny(extra_wire_bytes=jnp.asarray(extra),
+                       retrain_after_ps=jnp.asarray(retrain))
+    assert verify.verify_workload(hops2, ch, issue,
+                                  reliability=_rel_tables()).ok
+
+
+# ---------------------------------------------------------------------------
+# more corruption coverage (one invariant each)
+# ---------------------------------------------------------------------------
+
+def test_wrong_index_dtype_flagged():
+    hops, ch, issue = tiny()
+    rep = verify.verify_workload(
+        hops._replace(channel=jnp.asarray(np.asarray(hops.channel),
+                                          jnp.int64)),
+        ch, issue)
+    assert not rep.ok and any(c.startswith("dtype.") for c in rep.codes)
+
+
+def test_negative_nbytes_flagged():
+    hops, ch, issue = tiny()
+    nb = np.asarray(hops.nbytes).copy()
+    nb[1, 0] = -1
+    rep = verify.verify_workload(hops._replace(nbytes=jnp.asarray(nb)),
+                                 ch, issue)
+    assert not rep.ok and set(rep.codes) == {"hop.negative"}
+
+
+def test_partial_join_triple_flagged():
+    hops, ch, issue = tiny(join_id=jnp.full((N,), -1, jnp.int32))
+    rep = verify.verify_workload(hops, ch, issue)
+    assert not rep.ok and set(rep.codes) == {"join.partial"}
+
+
+def test_join_group_id_out_of_row_space_flagged():
+    hops, ch, issue = tiny(**_joins(
+        jid=[N, 0, -1, -1], jwait=[-1, -1, 0, -1], jarity=[-1, -1, 1, -1]))
+    rep = verify.verify_workload(hops, ch, issue)
+    assert not rep.ok and "join.bounds" in rep.codes
+
+
+def test_monotone_issue_opt_in():
+    hops, ch, issue = tiny()
+    shuffled = jnp.asarray([3_000, 0, 2_000, 1_000], jnp.int64)
+    assert verify.verify_workload(hops, ch, shuffled).ok
+    rep = verify.verify_workload(hops, ch, shuffled, monotone_issue=True)
+    assert not rep.ok and set(rep.codes) == {"issue.monotone"}
+
+
+def test_assert_valid_raises_with_report():
+    hops, ch, issue = tiny()
+    bad = np.asarray(hops.channel).copy()
+    bad[0, 0] = -1
+    with pytest.raises(verify.VerifyError) as ei:
+        verify.assert_valid(hops._replace(channel=jnp.asarray(bad)),
+                            ch, issue)
+    assert "chan.bounds" in ei.value.report.codes
+
+
+def test_simulate_auto_static_check():
+    from repro.core.engine import simulate_auto
+    hops, ch, issue = tiny()
+    s, used_oracle = simulate_auto(hops, ch, issue, check="static")
+    assert bool(s.converged) or used_oracle
+    bad = np.asarray(hops.channel).copy()
+    bad[0, 0] = C + 4
+    with pytest.raises(verify.VerifyError):
+        simulate_auto(hops._replace(channel=jnp.asarray(bad)), ch, issue,
+                      check="static")
+
+
+# ---------------------------------------------------------------------------
+# every real lowering path verifies clean (property over seeds/shapes)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**16 - 1), st.sampled_from([50, 173, 400]))
+@settings(max_examples=6, deadline=None)
+def test_demand_lowering_verifies_clean(seed, n):
+    graph = T.single_bus(n_mems=3, bw_MBps=64_000).build()
+    spec = RequesterSpec(node=0, n_requests=n, targets=[2, 3, 4],
+                         read_ratio=0.5, issue_interval_ps=10_000,
+                         payload_bytes=256, seed=seed)
+    wl = build_workload(graph, [spec], header_bytes=64, warmup_frac=0.0)
+    assert verify.verify_built(wl, graph).ok
+
+
+@given(st.integers(0, 2**16 - 1))
+@settings(max_examples=4, deadline=None)
+def test_stochastic_lowering_verifies_clean(seed):
+    flit = FlitConfig("flit256", ber=1e-4, reliability="stochastic",
+                      rel_seed=seed, retrain_threshold=2,
+                      retrain_ps=2_000_000)
+    graph = T.with_flit(T.single_bus(n_mems=4, bw_MBps=64_000),
+                        flit).build()
+    spec = RequesterSpec(node=0, n_requests=400, targets=[2, 3, 4, 5],
+                         pattern="uniform", read_ratio=0.5,
+                         issue_interval_ps=100, payload_bytes=944,
+                         seed=seed)
+    wl = build_workload(graph, [spec], header_bytes=64, warmup_frac=0.0)
+    assert verify.verify_built(wl, graph).ok
+
+
+@pytest.mark.parametrize("fanout", ["chain", "concurrent"])
+def test_coherence_lowering_verifies_clean(fanout):
+    kinds = [T.SWITCH, T.REQUESTER, T.REQUESTER, T.MEMORY]
+    links = [T.LinkSpec(i, 0, 64_000, 26_000) for i in (1, 2, 3)]
+    graph = T.Topology(np.asarray(kinds, np.int64), links,
+                       name="star").build()
+    spec = CoherenceFabricSpec(dev_node=3, req_nodes=(1, 2))
+    addr, wr, rid = make_skewed_stream(200, 256, write_ratio=0.3,
+                                       n_requesters=2, seed=6)
+    cfg = SFConfig(capacity=32, policy="fifo", footprint_lines=256)
+    _, ev = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=32),
+                        n_requesters=2, return_events=True)
+    low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev,
+                          fanout=fanout)
+    rep = verify.verify_workload(low.hops, make_channels(graph),
+                                 coherence_issue(low, ev.fab_issue_ps),
+                                 sf_events=ev, chan_pair=graph.chan_pair)
+    assert rep.ok, rep.summary()
+
+
+def test_stream_windows_verify_clean():
+    graph = T.single_bus(n_mems=3, bw_MBps=64_000).build()
+    spec = RequesterSpec(node=0, n_requests=300, targets=[2, 3, 4],
+                         read_ratio=0.5, issue_interval_ps=20_000,
+                         payload_bytes=128, seed=2)
+    wl = build_workload(graph, [spec], header_bytes=64, warmup_frac=0.0)
+    wins = list(stream_windows(wl.hops, np.asarray(wl.issue_ps), 64))
+    assert len(wins) > 1
+    for h, issue in wins:
+        assert verify.verify_workload(h, wl.channels, issue).ok
