@@ -27,10 +27,11 @@ import jax.numpy as jnp
 
 from repro.core.engine import Channels, Hops, simulate
 from repro.core.streaming import simulate_stream, stream_windows
+from repro.core.telemetry import channel_blame, channel_telemetry
 from repro.core.verify import assert_valid
 from repro.core.traces import arrival_times
 
-from .common import Row, Timer
+from .common import Phases, Row, Timer
 
 N_LANES = 4
 SVC = N_LANES                 # endpoint service channel
@@ -85,10 +86,12 @@ def _trace(n: int, chunk: int):
 
 def run(quick: bool = False) -> list[Row]:
     rows: list[Row] = []
-    ch = _channels()
+    phases = Phases()
+    with phases("build"):
+        ch = _channels()
+        small_h, small_i = _chunk(0, 2000, 0, seed=0)
 
     # gate: streamed == monolithic, bit for bit, at test scale -------------
-    small_h, small_i = _chunk(0, 2000, 0, seed=0)
     assert_valid(small_h, ch, small_i)
     mono = simulate(small_h, ch, small_i, max_rounds=400)
     assert bool(mono.converged)
@@ -106,10 +109,26 @@ def run(quick: bool = False) -> list[Row]:
                           np.asarray(mono.complete)[rr]), \
         "streamed completions diverge from the monolithic engine"
 
+    # gate: streamed blame fold + peak backlog == monolithic ---------------
+    small_sum = out.summary()
+    mb = channel_blame(small_h, ch, mono, small_i)
+    sb = small_sum["blame"]
+    for key, ref in (("queue_ps", mb.queue_ps), ("retrain_ps", mb.retrain_ps),
+                     ("wire_ps", mb.wire_ps),
+                     ("row_extra_ps", mb.row_extra_ps)):
+        assert np.array_equal(np.asarray(sb[key]), np.asarray(ref)), \
+            f"streamed blame {key} diverges from monolithic channel_blame"
+    assert int(sb["join_ps"]) == int(mb.join_ps)
+    assert int(sb["fixed_ps"]) == int(mb.fixed_ps)
+    mono_peak = np.asarray(channel_telemetry(small_h, ch, mono).peak_backlog)
+    assert np.array_equal(np.asarray(small_sum["peak_backlog"]), mono_peak), \
+        "streamed peak_backlog diverges from monolithic channel_telemetry"
+    assert small_sum["windows_converged"] == out.windows
+
     # the headline run: flat-memory windowed streaming ---------------------
     n = 60_000 if quick else 1_200_000
     window = 8_192 if quick else 65_536
-    with Timer() as t:
+    with Timer() as t, phases("execute"):
         res = simulate_stream(_trace(n, window), ch)
     s = res.summary()
 
@@ -134,11 +153,24 @@ def run(quick: bool = False) -> list[Row]:
               "oracle_windows": res.oracle_windows,
               "quantiles_ps": [p50, p99, p999],
               "max_utilization": util,
-              "span_ps": s["span_ps"]},
+              "span_ps": s["span_ps"],
+              # per-window fixpoint diagnostics + streamed observability
+              "rounds_sum": s["rounds_sum"],
+              "rounds_max": s["rounds_max"],
+              "windows_converged": s["windows_converged"],
+              "peak_backlog": np.asarray(s["peak_backlog"]).tolist(),
+              "blame": {key: (int(v) if np.ndim(v) == 0
+                              else np.asarray(v).tolist())
+                        for key, v in s["blame"].items()},
+              "host_phases": phases.asdict()},
     ))
     rows.append(Row(
         "streaming/equivalence_gate", 0.0,
-        f"rows=2000;windows={out.windows};bitexact=True",
-        meta={"windows": out.windows, "carried_peak": out.carried_peak},
+        f"rows=2000;windows={out.windows};bitexact=True;blame=bitexact;"
+        f"peak_backlog=bitexact",
+        meta={"windows": out.windows, "carried_peak": out.carried_peak,
+              "rounds_sum": small_sum["rounds_sum"],
+              "rounds_max": small_sum["rounds_max"],
+              "windows_converged": small_sum["windows_converged"]},
     ))
     return rows

@@ -153,11 +153,24 @@ def run(quick: bool = False) -> list[Row]:
     # from FCFS queueing; identical workload otherwise)
     stalls = np.asarray(jnp.sum(att.retrain_stall_ps, axis=1))
     assert stalls[0] < stalls[-1], "retrain stall did not grow with BER"
+    # per-channel blame conserves end to end on the heaviest table
+    last = jax.tree_util.tree_map(lambda x: x[-1], stacked)
+    bl = tm.channel_blame(last, ch,
+                          jax.tree_util.tree_map(lambda x: x[-1], sched),
+                          issue)
+    assert int(tm.blame_conservation_residual(bl)) == 0, \
+        "channel_blame does not conserve complete - issue"
     n_events = sum(1 for e in trace["traceEvents"] if e["ph"] != "M")
     rows.append(Row(
         "telemetry/metrics_per_sweep", t_metrics,
         f"conservation=0ps;max_util={util.max():.3f};"
-        f"trace_events={n_events};trace_valid=True",
-        meta={"max_utilization": float(util.max())},
+        f"trace_events={n_events};trace_valid=True;blame_residual=0ps",
+        meta={"max_utilization": float(util.max()),
+              "blame": {"queue_ps": int(jnp.sum(bl.queue_ps)),
+                        "retrain_ps": int(jnp.sum(bl.retrain_ps)),
+                        "wire_ps": int(jnp.sum(bl.wire_ps)),
+                        "row_extra_ps": int(jnp.sum(bl.row_extra_ps)),
+                        "join_ps": int(bl.join_ps),
+                        "fixed_ps": int(bl.fixed_ps)}},
     ))
     return rows

@@ -7,6 +7,7 @@ quantity; ``derived`` carries the paper-comparison payload).
 
 from __future__ import annotations
 
+import contextlib
 import sys
 import time
 from dataclasses import dataclass
@@ -33,6 +34,34 @@ class Timer:
 
     def __exit__(self, *exc):
         self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+class Phases:
+    """Host-side wall-clock phase accumulator for a bench's canonical
+    stages (build / lower / compile / execute).  Re-entering a named phase
+    accumulates, so per-config loops fold into one bucket:
+
+        phases = Phases()
+        with phases("build"): ...
+        row.meta["host_phases"] = phases.asdict()
+
+    The driver (`benchmarks.run`) additionally stamps whole-module
+    ``import_s`` / ``run_s`` onto every JSON row."""
+
+    def __init__(self):
+        self.seconds: dict[str, float] = {}
+
+    @contextlib.contextmanager
+    def __call__(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            self.seconds[name] = (self.seconds.get(name, 0.0)
+                                  + time.perf_counter() - t0)
+
+    def asdict(self) -> dict[str, float]:
+        return {k: round(v, 6) for k, v in sorted(self.seconds.items())}
 
 
 def emit(rows: list[Row]) -> None:

@@ -34,6 +34,7 @@ MODULES = (
     ("link_reliability", "benchmarks.bench_link_reliability"),
     ("coherence_fabric", "benchmarks.bench_coherence_fabric"),
     ("telemetry", "benchmarks.bench_telemetry"),
+    ("critical_path", "benchmarks.bench_critical_path"),
     ("streaming", "benchmarks.bench_streaming"),
     ("traces", "benchmarks.bench_traces"),
     ("coherence_modes", "benchmarks.bench_coherence_modes"),
@@ -69,6 +70,7 @@ def main() -> None:
     for name, modname in MODULES:
         if only and name not in only:
             continue
+        t_imp = time.perf_counter()
         try:
             mod = importlib.import_module(modname)
         except ImportError as e:  # pragma: no cover
@@ -76,6 +78,8 @@ def main() -> None:
             failed.append(name)
             errors[name] = f"ImportError:{e}"
             continue
+        import_s = time.perf_counter() - t_imp
+        t_run = time.perf_counter()
         try:
             rows = mod.run(quick=args.quick)
         except Exception as e:
@@ -83,13 +87,21 @@ def main() -> None:
             failed.append(name)
             errors[name] = f"{type(e).__name__}:{e}"
             continue
+        run_s = time.perf_counter() - t_run
         for r in rows:
             print(r.csv())
             sys.stdout.flush()
             row = {"name": r.name, "us_per_call": r.us_per_call,
                    "derived": r.derived}
-            if getattr(r, "meta", None):
-                row["meta"] = r.meta   # convergence/telemetry counters
+            # convergence/telemetry counters + host-side phase wall-clock
+            # (build/lower/compile/execute when the bench reports them;
+            # whole-module import/run always)
+            meta = dict(r.meta) if getattr(r, "meta", None) else {}
+            phases = dict(meta.get("host_phases", {}))
+            phases.setdefault("import_s", round(import_s, 6))
+            phases.setdefault("run_s", round(run_s, 6))
+            meta["host_phases"] = phases
+            row["meta"] = meta
             results.append(row)
     wall_s = time.time() - t0
     print(f"total_wall_s,{wall_s:.1f},")

@@ -38,8 +38,8 @@ from .traces import (  # noqa: E402,F401
 from . import coherence_traffic  # noqa: E402,F401
 from .coherence_traffic import (  # noqa: E402,F401
     CoherenceFabricSpec, CoherenceStream, CoupledResult, FANOUT_MODES,
-    bisnp_latencies, coherence_issue, lower_coherence, pad_rows,
-    simulate_coupled,
+    LEG_NAMES, bisnp_latencies, coherence_issue, hop_legs, leg_blame,
+    lower_coherence, pad_rows, simulate_coupled,
 )
 from . import streaming  # noqa: E402,F401
 from .streaming import (  # noqa: E402,F401
@@ -53,12 +53,19 @@ from .verify import (  # noqa: E402,F401
 from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
 from . import telemetry, trace_export  # noqa: E402,F401
 from .telemetry import (  # noqa: E402,F401
-    LatencyAttribution, ChannelTelemetry, WindowedSeries, QuantileSketch,
-    SFTelemetry, attribute_latency, conservation_residual, channel_telemetry,
+    LatencyAttribution, ChannelTelemetry, ChannelBlame, WindowedSeries,
+    QuantileSketch, SFTelemetry, attribute_latency, conservation_residual,
+    channel_telemetry, channel_blame, blame_conservation_residual,
     windowed_series, sketch_new, sketch_update, sketch_merge,
     sketch_quantile, sketch_quantiles, sf_telemetry, fabric_metrics,
     StreamTelemetry, stream_telemetry_new, stream_telemetry_fold,
     stream_telemetry_finalize,
+)
+from . import critical_path  # noqa: E402,F401
+from .critical_path import (  # noqa: E402,F401
+    KIND_NAMES, Backpointers, Blame, PathEdge, blame, critical_path as
+    extract_critical_path, critical_paths, extract_backpointers, path_total,
+    speedup_if,
 )
 from .trace_export import (  # noqa: E402,F401
     channel_names, schedule_trace, coupled_trace, validate_trace, write_trace,

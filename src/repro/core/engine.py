@@ -258,9 +258,6 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False,
     # compiles to the exact PR-1 scan
     has_retrain = hops.retrain_after_ps is not None
     has_carry = carry is not None
-    if has_carry and with_stalls:
-        raise NotImplementedError("stall replay runs on full schedules; "
-                                  "seeded windows fold telemetry instead")
     xs = (s_chan, s_valid, s_arrive, s_dir, s_row, s_ser, s_turn, s_rowhit,
           s_rowmiss, s_bytes)
     if has_retrain:
@@ -303,6 +300,12 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False,
             gap = jnp.where((eff_dir != jnp.int8(-1)) & (drn != eff_dir),
                             turn, 0)
             start = jnp.maximum(arr, jnp.maximum(eff_dep + gap, eff_down))
+            if with_stalls:
+                # grant time on a healthy link: the carried/segment down
+                # interval is the only extra term, so the stall is whatever
+                # it adds on top of contention + turnaround
+                stall = jnp.where(valid,
+                                  start - jnp.maximum(arr, eff_dep + gap), 0)
             row_extra = jnp.where(
                 row >= 0, jnp.where(row == eff_row, rhit, rmiss), 0)
         else:
@@ -490,7 +493,8 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
     )
 
 
-def replay_round(hops: Hops, channels: Channels, sched: Schedule):
+def replay_round(hops: Hops, channels: Channels, sched: Schedule,
+                 carry: StreamCarry | None = None):
     """Re-run one FCFS round from a resolved schedule (telemetry replay).
 
     The exact schedule is a fixed point of the round map, so replaying one
@@ -501,9 +505,14 @@ def replay_round(hops: Hops, channels: Channels, sched: Schedule):
     ``(start, depart, retrain_stall)``, each ``(N, H)``; the stall table is
     all zeros for deterministic-reliability layouts.  Pure observer: the
     schedule is an input, never recomputed.
+
+    ``carry`` replays a streaming window from its seeded frontier
+    (`core.streaming` folds per-window blame with it); a window's schedule
+    is a fixpoint of the *seeded* round map, so the same argument applies.
     """
     _, start, depart, stall = _one_round(
-        hops, channels, sched.arrive[:, 0], sched.arrive, with_stalls=True)
+        hops, channels, sched.arrive[:, 0], sched.arrive, with_stalls=True,
+        carry=carry)
     return start, depart, stall
 
 

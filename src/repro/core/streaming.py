@@ -57,8 +57,10 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from . import ref_des, verify
-from .engine import Channels, Hops, StreamCarry, simulate
+from .engine import Channels, Hops, StreamCarry, replay_round, simulate
 from .telemetry import (StreamTelemetry, stream_telemetry_finalize,
                         stream_telemetry_fold, stream_telemetry_new)
 
@@ -73,6 +75,30 @@ _COLLECT_KEYS = ("item_row", "item_hop", "item_start", "item_depart",
 
 def _np(x):
     return None if x is None else np.asarray(x)
+
+
+def _fold_backlog(run, peak, t, c, y):
+    """Fold flushed ±1 backlog events into per-channel (run, peak) in place.
+
+    Events are sorted (time, arrivals-first) per channel — the monolithic
+    `telemetry.channel_telemetry` order.  The peak is invariant under
+    reordering *within* one (channel, time, type) group (equal deltas
+    commute), so any stable per-channel fold of the settled history equals
+    the global sort bit-for-bit.
+    """
+    for cv in np.unique(c):
+        m = c == cv
+        o = np.lexsort((y[m], t[m]))
+        bl = run[cv] + np.cumsum(np.where(y[m][o] == 0, 1, -1))
+        peak[cv] = max(int(peak[cv]), int(bl.max()))
+        run[cv] = int(bl[-1])
+
+
+@jax.jit
+def _stall_replay(hops: Hops, channels: Channels, sched, carry: StreamCarry):
+    """Per-item retraining stall of one window, replayed from its seeded
+    fixpoint (`engine.replay_round` with the window's carry)."""
+    return replay_round(hops, channels, sched, carry=carry)[2]
 
 
 class StreamState:
@@ -98,6 +124,20 @@ class StreamState:
         self.carried_peak = 0
         self.chunk_idx = 0
         self.gid_next = 0
+        # fixpoint diagnostics folded across windows (mirrors what
+        # `benchmarks.run --json` records for monolithic runs)
+        self.rounds_sum = 0
+        self.rounds_max = 0
+        self.windows_converged = 0
+        # streamed peak backlog: pending ±1 events (arrive +1 / grant −1)
+        # not yet flushable — events at or after T_next must wait, because
+        # later windows can still emit events at exactly T_next — plus the
+        # carried per-channel running backlog and peak over flushed history
+        self.bl_t = np.zeros(0, np.int64)   # pending event times
+        self.bl_c = np.zeros(0, np.int64)   # pending event channels
+        self.bl_y = np.zeros(0, np.int8)    # pending type: 0 arrive, 1 grant
+        self.bl_run = np.zeros(c, np.int64)
+        self.bl_peak = np.zeros(c, np.int64)
 
 
 class StreamResult(NamedTuple):
@@ -119,7 +159,16 @@ class StreamResult(NamedTuple):
     def summary(self, qs=(0.5, 0.99, 0.999)) -> dict:
         out = stream_telemetry_finalize(self.telemetry, qs)
         out.update(windows=self.windows, carried_peak=self.carried_peak,
-                   oracle_windows=self.oracle_windows, n_rows=self.n_rows)
+                   oracle_windows=self.oracle_windows, n_rows=self.n_rows,
+                   rounds_sum=self.state.rounds_sum,
+                   rounds_max=self.state.rounds_max,
+                   windows_converged=self.state.windows_converged)
+        # drain any pending backlog events into copies: exact for a finished
+        # stream (the final window flushes everything), best-effort mid-run
+        run, peak = self.state.bl_run.copy(), self.state.bl_peak.copy()
+        _fold_backlog(run, peak, self.state.bl_t, self.state.bl_c,
+                      self.state.bl_y)
+        out["peak_backlog"] = peak
         return out
 
 
@@ -246,11 +295,14 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
         join_wait=jnp.asarray(jwait_w) if has_join else None,
         join_arity=jnp.asarray(jar_w) if has_join else None,
     )
+    # copies, not views: jnp.asarray can alias host numpy buffers, and the
+    # async _stall_replay below would otherwise race the in-place frontier
+    # update at the end of this window
     carry = StreamCarry(
-        depart_ps=jnp.asarray(state.ch_dep),
-        last_dir=jnp.asarray(state.ch_dir),
-        last_row=jnp.asarray(state.ch_row),
-        down_until_ps=jnp.asarray(state.ch_down),
+        depart_ps=jnp.asarray(state.ch_dep.copy()),
+        last_dir=jnp.asarray(state.ch_dir.copy()),
+        last_row=jnp.asarray(state.ch_row.copy()),
+        down_until_ps=jnp.asarray(state.ch_down.copy()),
         join_seed_ps=jnp.asarray(seed) if has_join else None,
     )
 
@@ -272,6 +324,10 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
         arr, st, dp = ref["arrive"], ref["start"], ref["depart"]
         fold_sched = ref_des.ref_schedule(ref)
         state.oracle_windows += 1
+    r_used = int(sched.rounds)
+    state.rounds_sum += r_used
+    state.rounds_max = max(state.rounds_max, r_used)
+    state.windows_converged += int(bool(sched.converged))
 
     # ---- settlement: arrival <= T_next is final (see module docstring)
     valid_np = W["valid"]
@@ -290,11 +346,21 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
     retired = real & ~carried_mask
 
     # ---- fold settled items / retired rows into the running telemetry
+    # gated arrival (hence the row's join wait) is final once the row
+    # retires or makes progress — each global row is recorded exactly once
+    gate_rec = (real & (hop0_w == 0)
+                & (retired | (carried_mask & (k0 > 0))))
     lat = np.where(retired, arr[:, h_w] - orig_issue, 0)
+    gate_wait = np.where(gate_rec, arr[:, 0] - orig_issue, 0)
+    if has_retrain:
+        stall = _stall_replay(hops_w, channels, fold_sched, carry)
+    else:
+        stall = jnp.zeros((n_pad, h_w), jnp.int64)
     state.telemetry = stream_telemetry_fold(
         state.telemetry, hops_w, channels, fold_sched,
         jnp.asarray(valid_np & settled), jnp.asarray(retired),
-        jnp.asarray(lat))
+        jnp.asarray(lat), stall, jnp.asarray(gate_rec),
+        jnp.asarray(gate_wait))
 
     if collect is not None:
         si, sh = np.nonzero((valid_np & settled) & real[:, None])
@@ -306,9 +372,7 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
         rr = np.nonzero(retired)[0]
         collect["row_id"].append(gid_w[rr])
         collect["row_complete"].append(arr[rr, h_w])
-        # gated arrival is final once the row retires or makes progress
-        rec = np.nonzero(real & (hop0_w == 0)
-                         & (retired | (carried_mask & (k0 > 0))))[0]
+        rec = np.nonzero(gate_rec)[0]
         collect["gate_row"].append(gid_w[rec])
         collect["gate_arrive0"].append(arr[rec, 0])
 
@@ -343,6 +407,24 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
         if mk.any():
             np.maximum.at(state.ch_down, W["channel"][mk],
                           arr_h[mk] + ret[mk])
+
+    # ---- streamed peak backlog: settled serving items emit +1 at arrival,
+    # −1 at grant; events strictly before T_next are flushed into the
+    # per-channel running fold (every future event is >= T_next: carried
+    # items arrive after it, new chunks issue at or after it), events at or
+    # after T_next stay pending so later same-instant arrivals keep the
+    # monolithic (time, arrivals-first) order
+    ev_t = np.concatenate([state.bl_t, arr_h[ri, hi], st[ri, hi]])
+    bc = W["channel"][ri, hi].astype(np.int64)
+    ev_c = np.concatenate([state.bl_c, bc, bc])
+    ev_y = np.concatenate([state.bl_y, np.zeros(ri.size, np.int8),
+                           np.ones(ri.size, np.int8)])
+    fl = ev_t < t_next
+    if fl.any():
+        _fold_backlog(state.bl_run, state.bl_peak,
+                      ev_t[fl], ev_c[fl], ev_y[fl])
+    keep = ~fl
+    state.bl_t, state.bl_c, state.bl_y = ev_t[keep], ev_c[keep], ev_y[keep]
 
     # ---- extract the rows still in flight as next-window suffixes
     inv = {v: k for k, v in keys.items()} if has_join else {}

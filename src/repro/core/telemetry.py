@@ -240,6 +240,84 @@ def channel_telemetry(hops: Hops, channels: Channels, sched: Schedule,
 
 
 # ---------------------------------------------------------------------------
+# Channel blame (aggregate bottleneck attribution)
+# ---------------------------------------------------------------------------
+
+
+class ChannelBlame(NamedTuple):
+    """Aggregate per-channel blame: where the fleet's latency went.
+
+    The per-request partition of `attribute_latency`, re-scattered onto the
+    channel that charged each component — the jit/vmap-safe aggregate view
+    of `core.critical_path`'s per-request walks (which add *which-event*
+    structure on the host).  Conservation:
+
+        Σ queue + Σ retrain + Σ wire + Σ row_extra + join + fixed == total
+
+    exactly (int64 ps; `blame_conservation_residual`).
+
+    queue_ps      (C,) FCFS contention wait per channel (turnaround gaps
+                  included, retraining share excluded).
+    retrain_ps    (C,) link-down stall per channel.
+    wire_ps       (C,) serialization time per channel.
+    row_extra_ps  (C,) row-buffer penalties per channel.
+    join_ps       ()  fork/join release stall (channel-less).
+    fixed_ps      ()  fixed post-hop latency (channel-less).
+    total_ps      ()  Σ ``complete − issue``.
+    """
+
+    queue_ps: jnp.ndarray
+    retrain_ps: jnp.ndarray
+    wire_ps: jnp.ndarray
+    row_extra_ps: jnp.ndarray
+    join_ps: jnp.ndarray
+    fixed_ps: jnp.ndarray
+    total_ps: jnp.ndarray
+
+
+def channel_blame(hops: Hops, channels: Channels, sched: Schedule,
+                  issue_ps: jnp.ndarray) -> ChannelBlame:
+    """Aggregate blame per channel (see `ChannelBlame`).  Pure observer,
+    jit/vmap-safe; the retraining share comes from the same fixpoint replay
+    as `attribute_latency`."""
+    c = channels.bw_MBps.shape[0]
+    n, h = hops.channel.shape
+    k = n * h
+    occupied = (hops.valid & (hops.nbytes > 0)).reshape(k)
+    flat_c = jnp.where(occupied, hops.channel.reshape(k), c)
+    clip = jnp.clip(hops.channel, 0, c - 1)
+
+    def per_chan(x):
+        return jnp.zeros(c + 1, jnp.int64).at[flat_c].add(
+            jnp.where(occupied, x, 0))[:c]
+
+    if hops.retrain_after_ps is not None:
+        _, _, stall = replay_round(hops, channels, sched)
+    else:
+        stall = jnp.zeros((n, h), jnp.int64)
+    wait = (sched.start - sched.arrive[:, :h]).reshape(k)
+    busy = (sched.depart - sched.start).reshape(k)
+    wire_t = wire_ser_ps(hops.nbytes, channels, clip,
+                         extra_wire=hops.extra_wire_bytes).reshape(k)
+    return ChannelBlame(
+        queue_ps=per_chan(wait - stall.reshape(k)),
+        retrain_ps=per_chan(stall.reshape(k)),
+        wire_ps=per_chan(wire_t),
+        row_extra_ps=per_chan(busy - wire_t),
+        join_ps=jnp.sum(sched.arrive[:, 0] - issue_ps),
+        fixed_ps=jnp.sum(jnp.where(hops.valid, hops.fixed_after_ps, 0)),
+        total_ps=jnp.sum(sched.complete - issue_ps),
+    )
+
+
+def blame_conservation_residual(b: ChannelBlame) -> jnp.ndarray:
+    """() int64 — zero iff the blame table partitions the total latency."""
+    parts = (jnp.sum(b.queue_ps) + jnp.sum(b.retrain_ps) + jnp.sum(b.wire_ps)
+             + jnp.sum(b.row_extra_ps) + b.join_ps + b.fixed_ps)
+    return b.total_ps - parts
+
+
+# ---------------------------------------------------------------------------
 # Windowed series
 # ---------------------------------------------------------------------------
 
@@ -433,11 +511,19 @@ class StreamTelemetry(NamedTuple):
     carried suffixes) fold exactly once and streaming totals equal the
     monolithic `channel_telemetry` counters bit-for-bit.  The latency
     sketch is `QuantileSketch` (mergeable, so merging per-window folds
-    equals sketching the monolithic latencies).  Peak backlog is the one
-    counter that cannot stream (it needs a global event sort); use the
-    monolithic pass when it matters.
+    equals sketching the monolithic latencies).  Blame components
+    (retrain / row-extra / join / fixed) fold from the same settled masks —
+    a streamed `ChannelBlame` is derivable in `stream_telemetry_finalize`
+    and equals the monolithic `channel_blame` bit-for-bit.  (Peak backlog
+    needs a windowed event sort over the settled prefix; the streaming
+    driver itself maintains it — `streaming.StreamState`.)
 
     payload_bytes/wire_bytes/busy_ps/wait_ps  (C,) int64 channel counters.
+    retrain_ps    (C,) int64 link-down stall per channel (settled items).
+    row_extra_ps  (C,) int64 row-buffer penalties per channel.
+    join_ps       () int64 fork/join release stall (rows counted once, at
+                  gate settlement).
+    fixed_ps      () int64 fixed post-hop latency of settled items.
     sketch        latency `QuantileSketch` over retired requests.
     n_retired     () int64 requests retired so far.
     t0_ps/t1_ps   () int64 observation span (min issue / max completion of
@@ -449,6 +535,10 @@ class StreamTelemetry(NamedTuple):
     wire_bytes: jnp.ndarray
     busy_ps: jnp.ndarray
     wait_ps: jnp.ndarray
+    retrain_ps: jnp.ndarray
+    row_extra_ps: jnp.ndarray
+    join_ps: jnp.ndarray
+    fixed_ps: jnp.ndarray
     n_retired: jnp.ndarray
     t0_ps: jnp.ndarray
     t1_ps: jnp.ndarray
@@ -458,7 +548,8 @@ def stream_telemetry_new(n_channels: int) -> StreamTelemetry:
     z = jnp.zeros(n_channels, jnp.int64)
     return StreamTelemetry(
         sketch=sketch_new(), payload_bytes=z, wire_bytes=z, busy_ps=z,
-        wait_ps=z, n_retired=jnp.int64(0),
+        wait_ps=z, retrain_ps=z, row_extra_ps=z,
+        join_ps=jnp.int64(0), fixed_ps=jnp.int64(0), n_retired=jnp.int64(0),
         t0_ps=jnp.int64((1 << 62) - 1 + (1 << 62)), t1_ps=jnp.int64(0),
     )
 
@@ -467,31 +558,52 @@ def stream_telemetry_new(n_channels: int) -> StreamTelemetry:
 def stream_telemetry_fold(acc: StreamTelemetry, hops: Hops,
                           channels: Channels, sched: Schedule,
                           settled: jnp.ndarray, retired: jnp.ndarray,
-                          latency_ps: jnp.ndarray) -> StreamTelemetry:
+                          latency_ps: jnp.ndarray,
+                          stall_ps: jnp.ndarray,
+                          gate_mask: jnp.ndarray,
+                          gate_wait_ps: jnp.ndarray) -> StreamTelemetry:
     """Fold one resolved window into the accumulator.
 
-    settled     (N, H) bool — items whose (start, depart) are final this
-                window (never again: the driver's settlement mask).
-    retired     (N,) bool — rows completing this window (padding excluded).
-    latency_ps  (N,) int64 — ``complete − original issue`` per retired row
-                (the original issue survives window re-entry; junk where
-                ``retired`` is False).
+    settled      (N, H) bool — items whose (start, depart) are final this
+                 window (never again: the driver's settlement mask),
+                 already AND-ed with validity.
+    retired      (N,) bool — rows completing this window (padding excluded).
+    latency_ps   (N,) int64 — ``complete − original issue`` per retired row
+                 (the original issue survives window re-entry; junk where
+                 ``retired`` is False).
+    stall_ps     (N, H) int64 — per-item retraining stall from the window's
+                 carry-seeded fixpoint replay (zeros without retrain
+                 tables); a settled item's stall is final, so folding it
+                 settled-masked reproduces the monolithic replay exactly.
+    gate_mask    (N,) bool — rows whose hop-0 gate (join wait / issue)
+                 became final this window; the driver guarantees each
+                 global row is flagged exactly once across the stream.
+    gate_wait_ps (N,) int64 — ``arrive[:, 0] − original issue`` per row
+                 (junk where ``gate_mask`` is False).
     """
     c = channels.bw_MBps.shape[0]
     n, h = hops.channel.shape
     k = n * h
     occupied = (hops.valid & (hops.nbytes > 0) & settled).reshape(k)
     flat_c = jnp.where(occupied, hops.channel.reshape(k), c)
+    clip = jnp.clip(hops.channel, 0, c - 1)
 
     def per_chan(x):
         return jnp.zeros(c + 1, jnp.int64).at[flat_c].add(
             jnp.where(occupied, x, 0))[:c]
 
-    busy = per_chan((sched.depart - sched.start).reshape(k))
+    busy_item = (sched.depart - sched.start).reshape(k)
+    wire_time = wire_ser_ps(hops.nbytes, channels, clip,
+                            extra_wire=hops.extra_wire_bytes).reshape(k)
+    busy = per_chan(busy_item)
     wait = per_chan((sched.start - sched.arrive[:, :h]).reshape(k))
     payload = per_chan(jnp.where(hops.is_payload.reshape(k),
                                  hops.nbytes.reshape(k), 0))
     wire = per_chan(hop_wire_bytes(hops, channels).reshape(k))
+    retrain = per_chan(stall_ps.reshape(k))
+    row_extra = per_chan(busy_item - wire_time)
+    fixed = jnp.sum(jnp.where(settled, hops.fixed_after_ps, 0))
+    join = jnp.sum(jnp.where(gate_mask, gate_wait_ps, 0))
 
     big = jnp.int64((1 << 62) - 1 + (1 << 62))
     iss = sched.complete - latency_ps
@@ -501,6 +613,10 @@ def stream_telemetry_fold(acc: StreamTelemetry, hops: Hops,
         wire_bytes=acc.wire_bytes + wire,
         busy_ps=acc.busy_ps + busy,
         wait_ps=acc.wait_ps + wait,
+        retrain_ps=acc.retrain_ps + retrain,
+        row_extra_ps=acc.row_extra_ps + row_extra,
+        join_ps=acc.join_ps + join,
+        fixed_ps=acc.fixed_ps + fixed,
         n_retired=acc.n_retired + jnp.sum(retired.astype(jnp.int64)),
         t0_ps=jnp.minimum(acc.t0_ps, jnp.min(jnp.where(retired, iss, big))),
         t1_ps=jnp.maximum(acc.t1_ps,
@@ -510,19 +626,37 @@ def stream_telemetry_fold(acc: StreamTelemetry, hops: Hops,
 
 def stream_telemetry_finalize(acc: StreamTelemetry,
                               qs=(0.5, 0.99, 0.999)) -> dict:
-    """Host-side summary of a finished (or in-progress) stream fold."""
+    """Host-side summary of a finished (or in-progress) stream fold.
+
+    The ``blame`` entry is the streamed `ChannelBlame` decomposition —
+    queue wait is the folded wait minus the retraining share, wire time is
+    folded busy minus row extras; with every window folded it equals the
+    monolithic `channel_blame` bit-for-bit (property-tested).
+    """
     span = max(int(acc.t1_ps) - int(acc.t0_ps), 1)
     import numpy as np
 
+    wait = np.asarray(acc.wait_ps)
+    busy = np.asarray(acc.busy_ps)
+    retrain = np.asarray(acc.retrain_ps)
+    row_extra = np.asarray(acc.row_extra_ps)
     return {
         "n_retired": int(acc.n_retired),
         "quantiles_ps": np.asarray(sketch_quantiles(acc.sketch, qs)),
         "payload_bytes": np.asarray(acc.payload_bytes),
         "wire_bytes": np.asarray(acc.wire_bytes),
-        "busy_ps": np.asarray(acc.busy_ps),
-        "wait_ps": np.asarray(acc.wait_ps),
-        "utilization": np.asarray(acc.busy_ps) / span,
+        "busy_ps": busy,
+        "wait_ps": wait,
+        "utilization": busy / span,
         "span_ps": span,
+        "blame": {
+            "queue_ps": wait - retrain,
+            "retrain_ps": retrain,
+            "wire_ps": busy - row_extra,
+            "row_extra_ps": row_extra,
+            "join_ps": int(acc.join_ps),
+            "fixed_ps": int(acc.fixed_ps),
+        },
     }
 
 
@@ -584,9 +718,16 @@ def fabric_metrics(hops: Hops, channels: Channels, sched: Schedule,
                 f"latency attribution violates conservation by {bad} ps — "
                 "the schedule is not a fixpoint of the round map (did it "
                 "converge?) or telemetry has a bug")
+    blame = channel_blame(hops, channels, sched, issue_ps)
+    if check:
+        bad = int(blame_conservation_residual(blame))
+        if bad != 0:
+            raise AssertionError(
+                f"channel blame violates conservation by {bad} ps")
     sk = sketch_update(sketch_new(), att.total_ps)
     return {
         "attribution": att,
+        "blame": blame,
         "channels": channel_telemetry(hops, channels, sched),
         "series": windowed_series(hops, channels, sched, issue_ps,
                                   n_bins=n_bins),

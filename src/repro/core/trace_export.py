@@ -12,7 +12,15 @@ Renders a resolved `(Hops, Channels, Schedule)` triple — and optionally a
     retrain trigger;
   * fixpoint convergence as a "C" counter series on pid 1 (`ts` =
     iteration index): `Schedule.rounds` and, for coupled runs,
-    `simulate_coupled`'s per-iteration max-abs residual.
+    `simulate_coupled`'s per-iteration max-abs residual;
+  * optionally (``flows=`` a `critical_path.Backpointers`) the gating
+    structure as Chrome flow events (cat ``critical_path``): one "s"/"f"
+    arrow per cross-row QUEUE grant (FCFS predecessor's depart -> grant),
+    per cross-row RETRAIN release (down-window source -> grant, drawn
+    from the link-down track) and per binding JOIN contributor (slowest
+    fork leg's last transmission -> waiter's first grant);
+  * optionally (``blame=`` a `critical_path.Blame`) the aggregated blame
+    tables as a "C" counter series on pid 2 (`ts` = channel index).
 
 Everything here runs host-side on concrete arrays (one ``np.asarray`` pull
 per field — no per-event device sync) and never feeds back into
@@ -34,6 +42,7 @@ import json
 
 import numpy as np
 
+from .critical_path import B_QUEUE, B_RETRAIN, KIND_NAMES
 from .engine import Channels, Hops, Schedule
 from .topology import MEMORY, REQUESTER, FabricGraph
 
@@ -75,14 +84,63 @@ def _merge_intervals(spans: list[tuple[int, int]]) -> list[tuple[int, int]]:
     return out
 
 
+def _flow_events(bp, c: int, ns) -> list[dict]:
+    """Flow "s"/"f" arrows (cat ``critical_path``) for the cross-row gating
+    edges recorded in a `critical_path.Backpointers`: QUEUE grants chained
+    from another row's depart, RETRAIN grants chained from the down-window
+    source (drawn off the link-down track, tid ``c + channel``), and the
+    binding JOIN contributor per gated row."""
+    evs: list[dict] = []
+    fid = 0
+
+    def arrow(name, s_tid, s_ts, f_tid, f_ts):
+        nonlocal fid
+        evs.append({"ph": "s", "pid": 0, "tid": s_tid, "ts": ns(s_ts),
+                    "cat": "critical_path", "name": name, "id": fid})
+        evs.append({"ph": "f", "bp": "e", "pid": 0, "tid": f_tid,
+                    "ts": ns(f_ts), "cat": "critical_path", "name": name,
+                    "id": fid})
+        fid += 1
+
+    last_occ = np.where(bp.serving.any(axis=1),
+                        bp.serving.shape[1] - 1
+                        - bp.serving[:, ::-1].argmax(axis=1), -1)
+    first_occ = np.where(bp.serving.any(axis=1),
+                         bp.serving.argmax(axis=1), -1)
+    for r, j in zip(*np.nonzero(bp.valid)):
+        ci = int(bp.channel[r, j])
+        if bp.bind[r, j] == B_QUEUE:
+            p, i = int(bp.qpred_row[r, j]), int(bp.qpred_hop[r, j])
+            if p != r:
+                arrow("queue", int(bp.channel[p, i]), bp.depart[p, i],
+                      ci, bp.start[r, j])
+        elif bp.bind[r, j] == B_RETRAIN:
+            p, i = int(bp.rsrc_row[r, j]), int(bp.rsrc_hop[r, j])
+            if p != r:
+                # the down window lives on the grant's own channel; its
+                # source is by construction a same-channel item/marker
+                arrow("retrain", c + ci, bp.depart[p, i],
+                      ci, bp.start[r, j])
+    for r in range(bp.n):
+        g = int(bp.gate_row[r])
+        if g >= 0 and g != r and last_occ[g] >= 0 and first_occ[r] >= 0:
+            gj, rj = int(last_occ[g]), int(first_occ[r])
+            arrow("join", int(bp.channel[g, gj]), bp.depart[g, gj],
+                  int(bp.channel[r, rj]), bp.start[r, rj])
+    return evs
+
+
 def schedule_trace(hops: Hops, channels: Channels, sched: Schedule,
                    names: list[str] | None = None,
-                   residual_ps=None) -> dict:
+                   residual_ps=None, flows=None, blame=None) -> dict:
     """Render one schedule as a Chrome-trace-event dict (see module doc).
 
     ``names`` labels the channel tracks (`channel_names(graph)`);
     ``residual_ps`` (optional, from `CoupledResult.residual_ps`) adds the
-    coupled-fixpoint residual counter series.
+    coupled-fixpoint residual counter series; ``flows`` (optional, a
+    `critical_path.Backpointers` for this schedule) adds the gating-edge
+    flow arrows; ``blame`` (optional, a `critical_path.Blame`) adds the
+    pid-2 blame counter series.
     """
     c = int(np.asarray(channels.bw_MBps).shape[0])
     chan = np.asarray(hops.channel)
@@ -148,6 +206,28 @@ def schedule_trace(hops: Hops, channels: Channels, sched: Schedule,
                            "name": "retraining"})
             events.append({"ph": "E", "pid": 0, "tid": c + ci, "ts": ns(hi)})
 
+    if flows is not None:
+        # appended after the B/E spans so equal-ts flow endpoints sort
+        # after their enclosing slice boundaries (stable sort below)
+        events.extend(_flow_events(flows, c, ns))
+    if blame is not None:
+        meta.append({"ph": "M", "pid": 2, "name": "process_name",
+                     "args": {"name": "bottleneck blame"}})
+        meta.append({"ph": "M", "pid": 2, "tid": 0, "name": "thread_name",
+                     "args": {"name": "blame (ps)"}})
+        for ci in range(c):
+            label = names[ci] if ci < len(names) else f"chan{ci}"
+            events.append({
+                "ph": "C", "pid": 2, "tid": 0, "ts": ci,
+                "name": f"blame {label}",
+                "args": {KIND_NAMES[k]: int(blame.table[ci, k])
+                         for k in range(blame.table.shape[1])
+                         if int(blame.table[ci, k])}})
+        events.append({"ph": "C", "pid": 2, "tid": 0, "ts": c,
+                       "name": "blame total",
+                       "args": {k: int(v)
+                                for k, v in blame.by_kind().items() if v}})
+
     events.append({"ph": "C", "pid": 1, "tid": 0, "ts": 0,
                    "name": "engine rounds",
                    "args": {"rounds": int(np.asarray(sched.rounds))}})
@@ -186,8 +266,10 @@ def validate_trace(obj) -> list[str]:
 
     Checks: top-level shape, required event fields, non-negative integer
     ``ts`` monotone in file order (per the format's requirement for
-    same-track nesting we check globally — the exporter sorts), and
-    matched, properly nested B/E pairs per (pid, tid) track.
+    same-track nesting we check globally — the exporter sorts), matched,
+    properly nested B/E pairs per (pid, tid) track, and well-formed flow
+    sequences per (cat, id): every "s" unique, every "t"/"f" preceded by
+    its "s", no flow left dangling at end of file.
     """
     errs: list[str] = []
     if isinstance(obj, (str, bytes)):
@@ -202,6 +284,7 @@ def validate_trace(obj) -> list[str]:
         return ["traceEvents is not a list"]
     last_ts = None
     stacks: dict[tuple, int] = {}
+    flows_open: set[tuple] = set()
     for i, e in enumerate(evs):
         if not isinstance(e, dict) or "ph" not in e:
             errs.append(f"event {i}: not an event object")
@@ -226,7 +309,25 @@ def validate_trace(obj) -> list[str]:
                 errs.append(f"event {i}: E without matching B on {key}")
             else:
                 stacks[key] -= 1
+        elif ph in ("s", "t", "f"):
+            if "name" not in e:
+                errs.append(f"event {i}: flow {ph} without name")
+            if "id" not in e:
+                errs.append(f"event {i}: flow {ph} without id")
+                continue
+            fkey = (e.get("cat"), e["id"])
+            if ph == "s":
+                if fkey in flows_open:
+                    errs.append(f"event {i}: duplicate flow s for {fkey}")
+                flows_open.add(fkey)
+            elif fkey not in flows_open:
+                errs.append(f"event {i}: flow {ph} without open s "
+                            f"for {fkey}")
+            elif ph == "f":
+                flows_open.discard(fkey)
     for key, depth in stacks.items():
         if depth:
             errs.append(f"track {key}: {depth} unclosed B event(s)")
+    for fkey in sorted(flows_open, key=repr):
+        errs.append(f"flow {fkey}: no terminating f event")
     return errs

@@ -475,3 +475,49 @@ def test_trace_validator_rejects_corruption():
     bad_ts = {"traceEvents": [{"ph": "B", "pid": 0, "tid": 0, "ts": -5,
                                "name": "x"}]}
     assert any("bad ts" in v for v in tx.validate_trace(bad_ts))
+
+
+def _flow(ph, ts, fid=1, **kw):
+    e = {"ph": ph, "pid": 0, "tid": 0, "ts": ts, "cat": "critical_path",
+         "name": "queue", "id": fid}
+    e.update(kw)
+    return e
+
+
+def test_trace_validator_flow_schema():
+    # a well-formed s/f pair is accepted
+    ok = {"traceEvents": [_flow("s", 0), _flow("f", 5, bp="e")]}
+    assert tx.validate_trace(ok) == []
+    # ...including a step event between them
+    ok3 = {"traceEvents": [_flow("s", 0), _flow("t", 2),
+                           _flow("f", 5, bp="e")]}
+    assert tx.validate_trace(ok3) == []
+    # dangling s: no terminating f
+    dangling = {"traceEvents": [_flow("s", 0)]}
+    assert any("no terminating f" in v for v in tx.validate_trace(dangling))
+    # f (and t) without an open s
+    orphan = {"traceEvents": [_flow("f", 5, bp="e")]}
+    assert any("without open s" in v for v in tx.validate_trace(orphan))
+    step = {"traceEvents": [_flow("t", 2)]}
+    assert any("without open s" in v for v in tx.validate_trace(step))
+    # duplicate s for the same (cat, id)
+    dup = {"traceEvents": [_flow("s", 0), _flow("s", 1),
+                           _flow("f", 5, bp="e")]}
+    assert any("duplicate flow s" in v for v in tx.validate_trace(dup))
+    # same id under a different cat is a distinct flow — the second one
+    # dangles even though ids collide
+    other = {"traceEvents": [_flow("s", 0), _flow("s", 1, cat="other"),
+                             _flow("f", 5, bp="e")]}
+    assert any("no terminating f" in v and "other" in v
+               for v in tx.validate_trace(other))
+    # missing id / name are rejected
+    noid = {"traceEvents": [{"ph": "s", "pid": 0, "tid": 0, "ts": 0,
+                             "cat": "critical_path", "name": "queue"}]}
+    assert any("without id" in v for v in tx.validate_trace(noid))
+    noname = {"traceEvents": [{"ph": "s", "pid": 0, "tid": 0, "ts": 0,
+                               "cat": "critical_path", "id": 1},
+                              _flow("f", 5, bp="e")]}
+    assert any("without name" in v for v in tx.validate_trace(noname))
+    # flow events participate in the global ts-monotonicity check
+    unordered = {"traceEvents": [_flow("s", 10), _flow("f", 3, bp="e")]}
+    assert any("<" in v for v in tx.validate_trace(unordered))
