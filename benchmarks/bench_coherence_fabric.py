@@ -45,7 +45,8 @@ from repro.core.coherence_traffic import (CoherenceFabricSpec, bisnp_latencies,
                                           coherence_issue, concat_background,
                                           lower_coherence, pad_rows)
 from repro.core.devices import RequesterSpec, build_workload
-from repro.core.engine import make_channels, simulate
+from repro.core.engine import (SimOptions, make_channels, round_bound,
+                               simulate)
 from repro.core.verify import verify_built, verify_workload
 from repro.core.snoop_filter import (CacheConfig, SFConfig,
                                      make_sequential_stream,
@@ -56,7 +57,6 @@ from .common import Row, Timer
 POLICIES = ("fifo", "lru", "lfi", "lifo", "mru", "blp")
 PORT = 64_000
 FIXED = 26_000
-MAX_ROUNDS = 400
 
 
 N_BG = 3
@@ -168,10 +168,14 @@ def coupled_policy_sweep(stream, capacity: int, footprint: int,
         return jnp.concatenate(
             [full, jnp.zeros(n_rows - full.shape[0], jnp.int64)])
 
+    # hops are vmapped tracers inside the jit: resolve the round bound
+    # host-side from the concrete stacked tables
+    opts = SimOptions(max_rounds=round_bound(stacked))
+
     @jax.jit
     def fabric_pass(hops, issues):
         return jax.vmap(
-            lambda h, i: simulate(h, channels, i, max_rounds=MAX_ROUNDS)
+            lambda h, i: simulate(h, channels, i, opts)
         )(hops, issues)
 
     miss = {p: jnp.asarray(lows[p].miss) for p in policies}
@@ -306,8 +310,7 @@ def run_fanout_sweep(owner_counts=(1, 2, 3, 4), n: int = 600,
             issue = coherence_issue(low, ev.fab_issue_ps)
             verify_workload(low.hops, channels, issue, sf_events=ev,
                             chan_pair=graph.chan_pair).raise_if_failed()
-            sched = simulate(low.hops, channels, issue,
-                             max_rounds=MAX_ROUNDS)
+            sched = simulate(low.hops, channels, issue)
             assert bool(sched.converged), f"fanout={fanout} did not converge"
             rounds[fanout] = int(sched.rounds)
             t_req = low.miss.shape[0]

@@ -84,7 +84,7 @@ def run_mode(mode: str, n_acc: int, n_per: int = 300):
                             route_choice=rng.integers(0, 1 << 20,
                                                       n_per * n_acc))
         verify_built(wl, graph).raise_if_failed()
-        sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps)
         r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                           wl.measured)
         return (float(r["steady_bandwidth_MBps"]),
@@ -105,7 +105,7 @@ def run_mode(mode: str, n_acc: int, n_per: int = 300):
                         route_choice=rng.integers(0, 1 << 20,
                                                   2 * n_per * n_acc))
     verify_built(wl, graph).raise_if_failed()
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                       wl.measured)
     # latency of a mediated access = snoop leg + data leg (mean of each class)

@@ -56,7 +56,6 @@ from .bench_streaming import _chunk as _stream_chunk
 from .common import Phases, Row, Timer
 
 ARTIFACT = "blame-critical-path.json"
-MAX_ROUNDS = 400
 
 
 def _coherence_config(quick: bool):
@@ -93,7 +92,7 @@ def _reliability_config(quick: bool):
 
 def _gate_config(name, hops, channels, issue, graph=None):
     """Run every per-config gate; returns (blame, paths, artifact entry)."""
-    sched = simulate(hops, channels, issue, max_rounds=MAX_ROUNDS)
+    sched = simulate(hops, channels, issue)
     assert bool(sched.converged), f"{name}: schedule did not converge"
     # extraction asserts replayed grants == engine grants (check=True)
     bp = extract_backpointers(hops, channels, sched, issue)
@@ -104,7 +103,7 @@ def _gate_config(name, hops, channels, issue, graph=None):
         (np.asarray(bp.complete) - np.asarray(bp.issue)).sum())
 
     # pure observer: the schedule re-simulates bit-for-bit after extraction
-    sched2 = simulate(hops, channels, issue, max_rounds=MAX_ROUNDS)
+    sched2 = simulate(hops, channels, issue)
     for field in ("start", "depart", "arrive", "complete"):
         assert np.array_equal(np.asarray(getattr(sched, field)),
                               np.asarray(getattr(sched2, field))), \
@@ -201,12 +200,11 @@ def run(quick: bool = False) -> list[Row]:
         sch = _stream_channels()
         shops, sissue = _stream_chunk(0, 2000 if quick else 8000, 0, seed=0)
     with Timer() as t, phases("execute"):
-        mono = simulate(shops, sch, sissue, max_rounds=MAX_ROUNDS)
+        mono = simulate(shops, sch, sissue)
         assert bool(mono.converged)
         mb = channel_blame(shops, sch, mono, sissue)
         out = simulate_stream(
-            stream_windows(shops, np.asarray(sissue), 512), sch,
-            max_rounds=MAX_ROUNDS)
+            stream_windows(shops, np.asarray(sissue), 512), sch)
         sb = out.summary()["blame"]
     for key, ref in (("queue_ps", mb.queue_ps), ("retrain_ps", mb.retrain_ps),
                      ("wire_ps", mb.wire_ps),

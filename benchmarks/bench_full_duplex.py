@@ -37,8 +37,7 @@ def run_one(read_ratio: float, header: int, duplex: str, n: int = 4000,
                          issue_interval_ps=200, seed=11)
     wl = build_workload(graph, [spec], header_bytes=header, warmup_frac=0.0)
     verify_built(wl, graph).raise_if_failed()
-    sched, used_oracle = simulate_auto(wl.hops, wl.channels, wl.issue_ps,
-                                       max_rounds=120)
+    sched, used_oracle = simulate_auto(wl.hops, wl.channels, wl.issue_ps)
     rstats = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                            wl.measured)
     cstats = channel_stats(wl.hops, sched, wl.channels)

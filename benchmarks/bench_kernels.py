@@ -12,10 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.devices import RequesterSpec, build_workload
+from repro.core.engine import SimOptions, simulate
 from repro.kernels.flash_attention.kernel import flash_attention_gqa
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.link_contention.kernel import segmented_depart
 from repro.kernels.link_contention.ref import segmented_depart_ref
+from repro.kernels.serve_round.kernel import NEG
+from repro.kernels.serve_round.ref import serve_scan_ref
 from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
@@ -109,4 +113,65 @@ def run(quick: bool = False) -> list[Row]:
                                         ser[:small_n]))))
     rows.append(Row("kernels/link_contention", us,
                     f"items_per_us={kk / us:.0f};pallas_interpret_exact={ok}"))
+
+    # serve round ((max,+) affine scan): raw composition-scan throughput
+    ks = 100_000 if quick else 400_000
+    def comp(p_neg, hi=1 << 16):
+        x = rng.integers(0, hi, ks).astype(np.int32)
+        return jnp.asarray(np.where(rng.random(ks) < p_neg, NEG, x))
+    maps = [comp(0.3), comp(0.5), comp(0.5), comp(0.3),
+            comp(0.2, 1 << 20), comp(0.2, 1 << 20)]
+    ref_fn = jax.jit(serve_scan_ref)
+    _, us = _time(ref_fn, *maps)
+    rows.append(Row("kernels/serve_round/scan", us,
+                    f"items_per_us={ks / us:.0f}"))
+
+    # serve round, engine-level: whole fixpoint (rows x rounds) through the
+    # kernel formulation vs the default lax path, same workload.  Gates:
+    # bit-exact completions, and the kernel formulation must not regress
+    # the engine (<= 1.5x the lax path wall-time on this backend).
+    from .bench_topology import build_topo
+    topo = build_topo("tree", 8)
+    graph = topo.build()
+    mems = [int(m) for m in topo.memories()]
+    per_req = 150 if quick else 500
+    specs = [RequesterSpec(node=int(r), n_requests=per_req, targets=mems,
+                           issue_interval_ps=1_000, seed=11)
+             for r in topo.requesters()]
+    wl = build_workload(graph, specs, header_bytes=64, warmup_frac=0.0)
+    lax_fn = jax.jit(lambda: simulate(wl.hops, wl.channels, wl.issue_ps))
+    krn_fn = jax.jit(lambda: simulate(wl.hops, wl.channels, wl.issue_ps,
+                                      SimOptions(use_kernel="ref")))
+    ref, us_lax = _time(lax_fn)
+    out, us_krn = _time(krn_fn)
+    exact = bool(np.array_equal(np.asarray(ref.complete),
+                                np.asarray(out.complete)))
+    ratio = us_krn / us_lax
+    n_rows = int(np.asarray(wl.hops.channel).shape[0])
+    rows.append(Row(
+        "kernels/serve_round/engine", us_krn,
+        f"rows={n_rows};rounds={int(out.rounds)};lax_us={us_lax:.0f};"
+        f"ratio_vs_lax={ratio:.2f};bit_exact={exact};"
+        f"gate={exact and ratio <= 1.5}"))
+    assert exact, "serve-round kernel path diverged from the lax engine"
+    assert ratio <= 1.5, \
+        f"serve-round kernel path regressed the engine ({ratio:.2f}x lax)"
+
+    # interpret-mode Pallas through the whole engine at a small shape
+    small_specs = [RequesterSpec(node=int(r), n_requests=20, targets=mems,
+                                 issue_interval_ps=1_000, seed=12)
+                   for r in topo.requesters()]
+    wl_s = build_workload(graph, small_specs, header_bytes=64,
+                          warmup_frac=0.0)
+    want = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps)
+    with Timer() as t:
+        got = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps,
+                       SimOptions(use_kernel="interpret"))
+        jax.block_until_ready(got.complete)
+    ok = bool(np.array_equal(np.asarray(want.complete),
+                             np.asarray(got.complete)))
+    rows.append(Row("kernels/serve_round/pallas_interpret", t.us,
+                    f"rows={int(np.asarray(wl_s.hops.channel).shape[0])};"
+                    f"bit_exact={ok}"))
+    assert ok, "interpret-mode serve-round kernel diverged from the engine"
     return rows

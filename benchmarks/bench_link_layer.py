@@ -61,7 +61,7 @@ def run_generation(gen: str, n: int = 2500) -> tuple[float, float]:
     }
     bw, flit = cfgs[gen]
     wl = _bus_workload(bw, flit, n, read_ratio=0.5)
-    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps, max_rounds=120)
+    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                       wl.measured)
     return float(r["bandwidth_MBps"]), float(r["mean_latency_ps"]) / 1000
@@ -76,7 +76,7 @@ def run_efficiency_check(n: int = 2000) -> tuple[float, float]:
     fraction.
     """
     wl = _bus_workload(PCIE6_X16_RAW_MBPS, FlitConfig("flit256"), n)
-    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps, max_rounds=120)
+    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps)
     c = channel_stats(wl.hops, sched, wl.channels)
     measured = float(np.asarray(c["efficiency"])[0])  # requester uplink
     analytic = flit_efficiency("flit256")
@@ -95,7 +95,7 @@ def run_ber_sweep(bers=BERS, n: int = 1500) -> list[tuple[float, float]]:
         ch = wl.channels._replace(
             replay_ppm=jnp.where(jnp.asarray(link), ppm, 0))
         from repro.core.engine import simulate
-        s = simulate(wl.hops, ch, wl.issue_ps, max_rounds=120)
+        s = simulate(wl.hops, ch, wl.issue_ps)
         r = request_stats(wl.hops, s, wl.issue_ps, wl.payload_bytes,
                           wl.measured)
         return r["bandwidth_MBps"], s.converged

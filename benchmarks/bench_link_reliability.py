@@ -79,8 +79,8 @@ def _stochastic_cfg(ber: float, rel_seed: int = 0,
                       retrain_ps=RETRAIN_PS)
 
 
-def run_tail_sweep(bers=BERS, n: int = 1500, rel_seed: int = 0,
-                   max_rounds: int = 160) -> list[dict]:
+def run_tail_sweep(bers=BERS, n: int = 1500,
+                   rel_seed: int = 0) -> list[dict]:
     """Per BER: p50/p99 latency (ns) of the expected and stochastic modes.
 
     Expected mode vmaps over the per-channel ``replay_ppm`` table; the
@@ -92,7 +92,7 @@ def run_tail_sweep(bers=BERS, n: int = 1500, rel_seed: int = 0,
 
     def one_expected(ppm):
         ch = wl.channels._replace(replay_ppm=jnp.where(link, ppm, 0))
-        s = simulate(wl.hops, ch, wl.issue_ps, max_rounds=max_rounds)
+        s = simulate(wl.hops, ch, wl.issue_ps)
         return s.complete, s.converged
 
     ppms = jnp.asarray([replay_overhead_ppm(b, "flit256") for b in bers],
@@ -142,7 +142,7 @@ def run_tail_sweep(bers=BERS, n: int = 1500, rel_seed: int = 0,
         lambda *xs: jnp.stack(xs), *[pad(h) for h in hops_by_ber])
 
     def one_stochastic(h):
-        s = simulate(h, ch_s, wl.issue_ps, max_rounds=max_rounds)
+        s = simulate(h, ch_s, wl.issue_ps)
         return s.complete, s.converged
 
     comp_s, conv_s = jax.vmap(one_stochastic)(stacked)
@@ -166,8 +166,8 @@ def run_zero_ber_equivalence(n: int = 800) -> bool:
     """BER-0 stochastic schedule == deterministic schedule, bit for bit."""
     wl_e = _bus_workload(FlitConfig("flit256"), n)
     wl_s = _bus_workload(_stochastic_cfg(0.0), n)
-    s_e = simulate(wl_e.hops, wl_e.channels, wl_e.issue_ps, max_rounds=160)
-    s_s = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps, max_rounds=160)
+    s_e = simulate(wl_e.hops, wl_e.channels, wl_e.issue_ps)
+    s_s = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps)
     return (np.array_equal(np.asarray(s_e.complete), np.asarray(s_s.complete))
             and np.array_equal(np.asarray(s_e.start), np.asarray(s_s.start)))
 
@@ -188,10 +188,8 @@ def run_retrain_stall(ber: float = 1e-4, n: int = 800,
     assert np.array_equal(
         np.asarray(wl_off.hops.extra_wire_bytes),
         np.asarray(strip_retrain_markers(wl_on.hops).extra_wire_bytes))
-    s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps,
-                     max_rounds=160)
-    s_on = simulate(wl_on.hops, wl_on.channels, wl_on.issue_ps,
-                    max_rounds=160)
+    s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps)
+    s_on = simulate(wl_on.hops, wl_on.channels, wl_on.issue_ps)
     events = int((np.asarray(wl_on.hops.retrain_after_ps) > 0).sum())
     down_ns = int(np.asarray(wl_on.hops.retrain_after_ps).sum()) / 1000
     return {

@@ -93,10 +93,10 @@ def run(quick: bool = False) -> list[Row]:
 
     # gate: streamed == monolithic, bit for bit, at test scale -------------
     assert_valid(small_h, ch, small_i)
-    mono = simulate(small_h, ch, small_i, max_rounds=400)
+    mono = simulate(small_h, ch, small_i)
     assert bool(mono.converged)
     out = simulate_stream(stream_windows(small_h, np.asarray(small_i), 256),
-                          ch, max_rounds=400, collect_schedule=True)
+                          ch, collect_schedule=True)
     col = out.collected
     r = col["item_row"].astype(np.int64)
     k = col["item_hop"].astype(np.int64)

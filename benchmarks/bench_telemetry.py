@@ -29,14 +29,13 @@ from repro.core import telemetry as tm
 from repro.core import topology as T
 from repro.core import trace_export as tx
 from repro.core.devices import RequesterSpec, build_workload
-from repro.core.engine import simulate
+from repro.core.engine import SimOptions, round_bound, simulate
 from repro.core.link_layer import FlitConfig
 from repro.core.verify import verify_built
 
 from .common import Row, Timer
 
 BUS_BW = 128_000
-MAX_ROUNDS = 200
 
 
 def _bus_wl(ber: float, n: int):
@@ -87,11 +86,13 @@ def run(quick: bool = False) -> list[Row]:
     wls = [_bus_wl(b, n) for b in bers]
     stacked = _pad_stack([w.hops for w in wls])
     ch, issue = wls[0].channels, wls[0].issue_ps
+    # hops are vmapped tracers inside the jit: resolve the round bound
+    # host-side from the concrete stacked tables
+    opts = SimOptions(max_rounds=round_bound(stacked))
 
     @jax.jit
     def schedule_sweep(hops):
-        return jax.vmap(lambda h: simulate(h, ch, issue,
-                                           max_rounds=MAX_ROUNDS))(hops)
+        return jax.vmap(lambda h: simulate(h, ch, issue, opts))(hops)
 
     @jax.jit
     def metric_sweep(hops, sched):

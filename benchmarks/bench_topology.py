@@ -59,7 +59,7 @@ def run_one(kind: str, n_pairs: int, n_per_pair: int, interval_ps: int,
                         header_bytes=64,
                         route_choice=rng.integers(0, 1 << 20, n_tx))
     verify_built(wl, graph).raise_if_failed()
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     rstats = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                            wl.measured)
     cstats = channel_stats(wl.hops, sched, wl.channels)

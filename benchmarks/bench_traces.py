@@ -47,7 +47,7 @@ def replay_topology(kind: str, trace: dict, n_pairs: int = 8,
     wl = build_workload(graph, specs, header_bytes=64, warmup_frac=0.0,
                         route_choice=rng.integers(0, 1 << 20, n_tx))
     verify_built(wl, graph).raise_if_failed()
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes, wl.measured)
     thr = float(r["bandwidth_MBps"])
     lat = float(r["mean_latency_ps"]) / 1000.0
@@ -63,7 +63,7 @@ def replay_bus(trace: dict, duplex: str, n: int = 3000):
                          trace_addr=trace["addr"], trace_is_write=trace["is_write"])
     wl = build_workload(graph, [spec], header_bytes=16, warmup_frac=0.0)
     verify_built(wl, graph).raise_if_failed()
-    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps, max_rounds=120)
+    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps)
     comp = np.asarray(sched.complete)
     makespan = comp.max() - int(np.asarray(wl.issue_ps).min())
     return n * 64 * 1e12 / makespan / 1e6, comp  # MB/s, completions

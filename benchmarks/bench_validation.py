@@ -80,7 +80,7 @@ def measure(name: str, read_ratio: float, interval_ps: int, n: int = 3000,
     wl = build_workload(graph, [spec], header_bytes=p["header"],
                         warmup_frac=0.0)
     verify_built(wl, graph).raise_if_failed()
-    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps, max_rounds=100)
+    sched, _ = simulate_auto(wl.hops, wl.channels, wl.issue_ps)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes, wl.measured)
     meas = np.asarray(wl.measured)
     lat_ns = float(np.asarray(r["latency_ps"])[meas].mean()) / 1000.0

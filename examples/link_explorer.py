@@ -27,8 +27,7 @@ def run_fabric(flit, label: str, scale: int = 4) -> None:
                            payload_bytes=944, read_ratio=0.5, seed=i)
              for i, r in enumerate(topo.requesters())]
     wl = build_workload(g, specs, header_bytes=64, warmup_frac=0.25)
-    sched, oracle = simulate_auto(wl.hops, wl.channels, wl.issue_ps,
-                                  max_rounds=220)
+    sched, oracle = simulate_auto(wl.hops, wl.channels, wl.issue_ps)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                       wl.measured)
     print(f"  {label:28s} goodput {float(r['steady_bandwidth_MBps'])/1000:8.1f}"

@@ -28,7 +28,7 @@ def build(flit, n: int = 1200):
 
 
 def latencies_ns(wl) -> np.ndarray:
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=160)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     assert bool(sched.converged)
     return np.asarray(sched.complete - wl.issue_ps) / 1000
 

@@ -27,7 +27,7 @@ for kind in ("chain", "ring", "fully_connected"):
     rng = np.random.default_rng(0)
     wl = build_workload(g, specs, header_bytes=64,
                         route_choice=rng.integers(0, 1 << 20, 160 * 8))
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                       wl.measured)
     print(f"  {kind:16s} {float(r['steady_bandwidth_MBps']) / 64000:.2f}x port")

@@ -32,7 +32,7 @@ def bandwidth_sweep():
         rng = np.random.default_rng(7)
         wl = build_workload(g, specs, header_bytes=64,
                             route_choice=rng.integers(0, 1 << 20, n_tx))
-        sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=220)
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps)
         r = request_stats(wl.hops, sched, wl.issue_ps, wl.payload_bytes,
                           wl.measured)
         print(f"  {kind:16s} {float(r['steady_bandwidth_MBps']) / 64_000:5.2f}x"

@@ -23,8 +23,9 @@ from .link_layer import (  # noqa: E402,F401
     credit_limited_MBps,
 )
 from .engine import (  # noqa: E402,F401
-    Channels, Hops, Schedule, StreamCarry, simulate, simulate_auto,
-    channel_stats, request_stats, make_channels, ser_ps, empty_carry,
+    Channels, Hops, Schedule, SimOptions, StreamCarry, simulate,
+    simulate_auto, channel_stats, request_stats, make_channels, ser_ps,
+    empty_carry, round_bound,
 )
 from .devices import RequesterSpec, Workload, build_workload  # noqa: E402,F401
 from . import calibration, traces, routing, snoop_filter  # noqa: E402,F401
@@ -47,8 +48,8 @@ from .streaming import (  # noqa: E402,F401
 )
 from . import verify  # noqa: E402,F401
 from .verify import (  # noqa: E402,F401
-    Finding, VerifyError, VerifyReport, assert_valid, verify_built,
-    verify_workload,
+    Finding, VerifyError, VerifyReport, assert_valid, join_depth,
+    verify_built, verify_workload,
 )
 from .routing import route_and_simulate, STRATEGIES  # noqa: E402,F401
 from . import telemetry, trace_export  # noqa: E402,F401
@@ -73,3 +74,55 @@ from .trace_export import (  # noqa: E402,F401
 from . import fabric_model, autotune, vcs  # noqa: E402,F401
 from .fabric_model import TPUFabric, predict_collective  # noqa: E402,F401
 from .autotune import WorkloadDims, Layout, autotune as autotune_layouts  # noqa: E402,F401
+
+# The supported public surface.  Grouped by layer; every simulation entry
+# point (`simulate`, `simulate_auto`, `simulate_coupled`, `simulate_stream`)
+# takes the same `SimOptions`, and every result type (`Schedule`,
+# `CoupledResult`, `StreamResult`) reports `rounds`/`converged`/`residual_ps`.
+__all__ = [
+    # topology / link layer
+    "REQUESTER", "SWITCH", "MEMORY", "Topology", "LinkSpec", "EndpointSpec",
+    "FabricGraph", "chain", "tree", "ring", "spine_leaf", "fully_connected",
+    "single_bus", "with_flit", "TOPOLOGY_BUILDERS", "FlitConfig",
+    "FLIT_MODES", "PCIE5_FLIT", "PCIE6_FLIT", "flit_efficiency",
+    "goodput_efficiency", "replay_overhead_ppm", "credit_limited_MBps",
+    # schedule engine
+    "Channels", "Hops", "Schedule", "SimOptions", "StreamCarry", "simulate",
+    "simulate_auto", "round_bound", "channel_stats", "request_stats",
+    "make_channels", "ser_ps", "empty_carry",
+    # device layer / workloads / traces
+    "RequesterSpec", "Workload", "build_workload", "ARRIVAL_PATTERNS",
+    "WORKLOADS", "arrival_times", "request_stream", "tenant_mix",
+    # snoop filter + coupled coherence
+    "SFConfig", "CacheConfig", "SFEvents", "SFState", "simulate_sf",
+    "sf_init_state", "POLICIES", "make_skewed_stream",
+    "make_sequential_stream", "CoherenceFabricSpec", "CoherenceStream",
+    "CoupledResult", "FANOUT_MODES", "LEG_NAMES", "bisnp_latencies",
+    "coherence_issue", "hop_legs", "leg_blame", "lower_coherence",
+    "pad_rows", "simulate_coupled",
+    # streaming
+    "StreamResult", "StreamState", "simulate_stream", "stream_windows",
+    # verification
+    "Finding", "VerifyError", "VerifyReport", "assert_valid", "join_depth",
+    "verify_built", "verify_workload",
+    # routing / telemetry / attribution / export
+    "route_and_simulate", "STRATEGIES", "LatencyAttribution",
+    "ChannelTelemetry", "ChannelBlame", "WindowedSeries", "QuantileSketch",
+    "SFTelemetry", "attribute_latency", "conservation_residual",
+    "channel_telemetry", "channel_blame", "blame_conservation_residual",
+    "windowed_series", "sketch_new", "sketch_update", "sketch_merge",
+    "sketch_quantile", "sketch_quantiles", "sf_telemetry", "fabric_metrics",
+    "StreamTelemetry", "stream_telemetry_new", "stream_telemetry_fold",
+    "stream_telemetry_finalize", "KIND_NAMES", "Backpointers", "Blame",
+    "PathEdge", "blame", "extract_critical_path", "critical_paths",
+    "extract_backpointers", "path_total", "speedup_if", "channel_names",
+    "schedule_trace", "coupled_trace", "validate_trace", "write_trace",
+    # accelerator-side models
+    "TPUFabric", "predict_collective", "WorkloadDims", "Layout",
+    "autotune_layouts",
+    # submodules
+    "topology", "engine", "devices", "link_layer", "calibration", "traces",
+    "routing", "snoop_filter", "coherence_traffic", "streaming", "verify",
+    "telemetry", "trace_export", "critical_path", "fabric_model",
+    "autotune", "vcs",
+]

@@ -73,7 +73,8 @@ import numpy as np
 
 from . import link_layer
 from .devices import Workload, finish_hops, marker_column_map, packetize
-from .engine import Hops, Schedule, make_channels, simulate_auto
+from .engine import (Hops, Schedule, SimOptions, _merge_options,
+                     make_channels, round_bound, simulate_auto)
 from .snoop_filter import (CacheConfig, SFConfig, SFEvents, SFResult,
                            sf_init_state, simulate_sf)
 from .topology import SWITCH, FabricGraph
@@ -153,6 +154,7 @@ class CoupledResult(NamedTuple):
     converged: bool
     used_oracle: bool
     damped: int = 0              # averaged (damped) updates applied
+    rounds: int = 0              # total engine rounds across all iterations
     residual_ps: "np.ndarray | None" = None  # per-iteration max |Δfabric_lat|
     # engine-level view of the final pass (coherence rows first, then any
     # background rows) — what `schedule` actually scheduled; feed these to
@@ -641,10 +643,12 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
                      cache_cfg: CacheConfig, graph: FabricGraph,
                      spec: CoherenceFabricSpec, n_requesters: int = 1,
                      background: "Workload | None" = None,
+                     options: SimOptions | None = None,
                      max_iters: int = 8, tol_ps: int = 0,
-                     max_rounds: int = 0, fanout: str = "concurrent",
+                     fanout: str = "concurrent",
                      upgrade_bisnp: bool | None = None,
-                     damping: bool = False) -> CoupledResult:
+                     max_rounds: int = None,
+                     damping: bool = None) -> CoupledResult:
     """Fabric-coupled DCOH simulation (the §V-B/§V-C studies with the
     infinite bus replaced by real routed CXL traffic).
 
@@ -671,9 +675,19 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
     measurement indefinitely, so exact tol-0 convergence is the undamped
     mode's job.  ``CoupledResult.damped`` counts the averaged updates.
     The default stays undamped — PR-4 trajectories bit-for-bit.
+
+    ``options`` is the uniform `engine.SimOptions` knob set: ``max_rounds``
+    (0 = the computed join-depth bound of the lowered workload, resolved
+    once — the hop tables are a fixpoint invariant), ``check`` / ``use_kernel``
+    forwarded to every inner `simulate_auto` pass, and ``damping`` as
+    described above.  The bare ``max_rounds=`` / ``damping=`` kwargs are
+    deprecated shims.
     """
     if max_iters < 1:
         raise ValueError("max_iters must be >= 1")
+    opts = _merge_options("simulate_coupled", options,
+                          max_rounds=max_rounds, damping=damping)
+    damping = opts.damping
     addr_j = jnp.asarray(addr)
     wr_j = jnp.asarray(is_write)
     rid_j = jnp.asarray(rid)
@@ -690,6 +704,8 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
     # only the issue vector changes across iterations
     hops_all, _ = concat_background(low, coherence_issue(low, ev.fab_issue_ps),
                                     background)
+    inner = SimOptions(max_rounds=opts.max_rounds or round_bound(hops_all),
+                       check=opts.check, use_kernel=opts.use_kernel)
     bg_issue = (None if background is None
                 else jnp.asarray(background.issue_ps))
 
@@ -703,6 +719,7 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
     iters = 0
     converged = False
     damped = 0
+    total_rounds = 0
     resid_hist = []           # convergence telemetry: max |Δ| per iteration
     for iters in range(1, max_iters + 1):
         if fab is not None:
@@ -711,7 +728,8 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
                                   fabric_lat_ps=fab, return_events=True)
         issue_all = issue_vec(ev)
         sched, used_oracle = simulate_auto(hops_all, channels, issue_all,
-                                           max_rounds=max_rounds)
+                                           inner)
+        total_rounds += int(sched.rounds)
         new_fab = jnp.where(miss, sched.complete[:T] - issue_all[:T],
                             jnp.int64(0))
         if fab is not None:
@@ -739,12 +757,13 @@ def simulate_coupled(addr, is_write, rid, sf_cfg: SFConfig,
                               return_events=True)
         issue_all = issue_vec(ev)
         sched, used_oracle = simulate_auto(hops_all, channels, issue_all,
-                                           max_rounds=max_rounds)
+                                           inner)
+        total_rounds += int(sched.rounds)
     return CoupledResult(
         sf=res, events=ev, schedule=sched, lowering=low, fabric_lat_ps=fab,
         bisnp_lat_ps=bisnp_latencies(sched, low),
         issue_ps=ev.fab_issue_ps, iters=iters, converged=converged,
-        used_oracle=used_oracle, damped=damped,
+        used_oracle=used_oracle, damped=damped, rounds=total_rounds,
         residual_ps=np.asarray(resid_hist, dtype=np.int64),
         fabric_hops=hops_all, fabric_issue_ps=issue_all,
     )

@@ -35,7 +35,9 @@ classes.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -156,12 +158,18 @@ class Hops(NamedTuple):
 
 
 class Schedule(NamedTuple):
+    """Resolved schedule + the unified convergence diagnostics every
+    simulation result type in `repro.core` exposes under the same names:
+    ``rounds`` / ``converged`` / ``residual_ps`` (see also `CoupledResult`
+    and `streaming.StreamResult`)."""
+
     arrive: jnp.ndarray    # (N, H+1) arrival per hop; [:, H] = completion
     start: jnp.ndarray     # (N, H) channel grant time
     depart: jnp.ndarray    # (N, H) transmission end
     complete: jnp.ndarray  # (N,)
     rounds: jnp.ndarray    # () iterations used
     converged: jnp.ndarray  # () bool
+    residual_ps: jnp.ndarray | None = None  # () last round's max |Δarrive|
 
 
 class StreamCarry(NamedTuple):
@@ -209,8 +217,125 @@ def empty_carry(n_channels: int, n_rows: int | None = None) -> StreamCarry:
     )
 
 
+_CHECK_MODES = ("off", "static", "oracle")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimOptions:
+    """One options surface for every simulation entry point.
+
+    `simulate`, `simulate_auto`, `coherence_traffic.simulate_coupled` and
+    `streaming.simulate_stream` all accept an ``options=SimOptions(...)``
+    argument; each consumes the subset of fields that applies to it and
+    ignores the rest, so one options object can be threaded through a whole
+    pipeline.  The historical per-function kwargs (``max_rounds=``,
+    ``check=True/False``, ``damping=``, ``static_check=``,
+    ``oracle_fallback=``) remain as deprecated shims that warn and fold
+    into an equivalent ``SimOptions``.
+
+    max_rounds  fixpoint round budget; 0 (default) = the computed
+                join-depth-aware `round_bound` — provably sufficient, so
+                explicit budgets are only for experiments that *want* a
+                truncated fixpoint.
+    check       "off"    — no verification, no host sync (the returned
+                           schedule may be unconverged);
+                "static" — run the fabric-IR verifier (`core.verify`)
+                           before tracing, then behave as "oracle";
+                "oracle" — fall back to the event-driven `ref_des` oracle
+                           when the fixpoint reports non-convergence
+                           (replaces the old ``check=True`` bool /
+                           ``check="static"`` string overload).
+    damping     damped Picard iteration in `simulate_coupled`'s outer
+                coherence fixpoint (ignored by the other entry points).
+    use_kernel  run the inner serve round through the Pallas kernel
+                (`kernels.serve_round`): ``True`` = backend auto-dispatch
+                (TPU kernel, lax elsewhere), or an explicit impl string
+                ``"pallas"`` / ``"interpret"`` / ``"ref"``.
+    """
+
+    max_rounds: int = 0
+    check: str = "oracle"
+    damping: bool = False
+    use_kernel: bool | str = False
+
+    def __post_init__(self):
+        if self.check not in _CHECK_MODES:
+            raise ValueError(
+                f"SimOptions.check must be one of {_CHECK_MODES}, "
+                f"got {self.check!r}")
+
+    @property
+    def kernel_impl(self) -> str:
+        """`_one_round` dispatch string for ``use_kernel``."""
+        if self.use_kernel is False:
+            return "scan"
+        if self.use_kernel is True:
+            return "auto"
+        return self.use_kernel
+
+
+def _legacy_check(val) -> str:
+    """Map the historical ``check=`` overload onto `SimOptions.check`."""
+    if val == "static":
+        return "static"
+    if isinstance(val, str) and val in _CHECK_MODES:
+        return val
+    return "oracle" if val else "off"
+
+
+def _merge_options(fn: str, options, **legacy) -> SimOptions:
+    """Resolve ``options`` plus deprecated per-call kwargs (``None`` =
+    not passed) into one `SimOptions`, warning per legacy kwarg."""
+    if isinstance(options, int):
+        # historical positional max_rounds
+        legacy = {**legacy, "max_rounds": options}
+        options = None
+    opts = options if options is not None else SimOptions()
+    if not isinstance(opts, SimOptions):
+        raise TypeError(f"{fn}: options must be a SimOptions, "
+                        f"got {type(opts).__name__}")
+    updates = {}
+    for name, val in legacy.items():
+        if val is None:
+            continue
+        if name == "check":
+            val = _legacy_check(val)
+        warnings.warn(
+            f"{fn}({name}=...) is deprecated; pass "
+            f"options=SimOptions({name}={val!r})",
+            DeprecationWarning, stacklevel=3)
+        updates[name] = val
+    return dataclasses.replace(opts, **updates) if updates else opts
+
+
+def round_bound(hops: Hops) -> int:
+    """Join-depth-aware fixpoint round budget for a lowered `Hops` table —
+    ``(join_depth + 1) * (3*H + 8)`` (see `verify.round_bound` for the
+    derivation).  Host-side: called on concrete tables at build time or by
+    the `simulate` wrapper.  Inside a ``jit``/``vmap`` trace the join
+    tables are abstract, so the bound degrades to the chain-only term —
+    join-heavy sweeps should compute the bound on the concrete tables and
+    pass ``SimOptions(max_rounds=round_bound(hops))`` explicitly.
+    """
+    from . import verify  # host-side helper module, no jax imports
+
+    h = int(hops.channel.shape[-1])
+    jid, jw = hops.join_id, hops.join_wait
+    if jid is None or jw is None:
+        return verify.round_bound(h)
+    if isinstance(jid, jax.core.Tracer) or isinstance(jw, jax.core.Tracer):
+        return verify.round_bound(h)
+    jid, jw = np.asarray(jid), np.asarray(jw)
+    if jid.ndim == 1:
+        return verify.round_bound(h, jid, jw)
+    # stacked tables (host-side sweep layouts): the max over members
+    return max(verify.round_bound(h, j, w)
+               for j, w in zip(jid.reshape(-1, jid.shape[-1]),
+                               jw.reshape(-1, jw.shape[-1])))
+
+
 def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False,
-               carry: StreamCarry | None = None):
+               carry: StreamCarry | None = None, impl: str = "scan"):
     """One sort→segmented-scan→propagate pass.  arrive: (N, H+1).
 
     ``with_stalls=True`` (telemetry replay, `core.telemetry`) additionally
@@ -258,6 +383,29 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False,
     # compiles to the exact PR-1 scan
     has_retrain = hops.retrain_after_ps is not None
     has_carry = carry is not None
+    if impl != "scan":
+        # Pallas serve-round kernel (`kernels.serve_round`): one code path
+        # for every layout — deterministic/no-carry configs ride the carry
+        # semantics with cold seeds, bit-identical by the empty-carry
+        # equivalence the streaming suite property-tests
+        from ..kernels.serve_round.ops import serve_round
+
+        s_retrain = (hops.retrain_after_ps.reshape(k)[order]
+                     if has_retrain else jnp.zeros(k, jnp.int64))
+        if has_carry:
+            seed_ix = jnp.clip(s_chan, 0, ch.bw_MBps.shape[0] - 1)
+            sd = (carry.depart_ps[seed_ix], carry.last_dir[seed_ix],
+                  carry.last_row[seed_ix], carry.down_until_ps[seed_ix])
+        else:
+            sd = (jnp.zeros(k, jnp.int64), jnp.full(k, -1, jnp.int8),
+                  jnp.full(k, -2, jnp.int32), jnp.zeros(k, jnp.int64))
+        serving = s_valid & (s_bytes > 0)
+        marker = s_valid & (s_bytes == 0) & (s_retrain > 0)
+        s_start, s_depart, s_stall = serve_round(
+            s_chan, serving, marker, s_arrive, s_dir, s_row, s_ser,
+            s_turn, s_rowhit, s_rowmiss, s_retrain, *sd, impl=impl)
+        return _scatter_round(hops, issue_ps, order, s_start, s_depart,
+                              s_stall if with_stalls else None)
     xs = (s_chan, s_valid, s_arrive, s_dir, s_row, s_ser, s_turn, s_rowhit,
           s_rowmiss, s_bytes)
     if has_retrain:
@@ -388,21 +536,27 @@ def _one_round(hops: Hops, ch: Channels, issue_ps, arrive, with_stalls=False,
     if has_retrain or has_carry:
         init = init + (jnp.int64(0),)
     _, out = jax.lax.scan(scan_fn, init, xs)
-    s_start, s_depart = out[0], out[1]
+    return _scatter_round(hops, issue_ps, order, out[0], out[1],
+                          out[2] if with_stalls else None)
 
+
+def _scatter_round(hops: Hops, issue_ps, order, s_start, s_depart, s_stall):
+    """Scatter sorted per-item grants back to (N, H) and propagate exact
+    arrivals (padded hops pass the previous arrival through)."""
+    n, h = hops.channel.shape
+    k = n * h
     start = jnp.zeros(k, dtype=jnp.int64).at[order].set(s_start).reshape(n, h)
     depart = jnp.zeros(k, dtype=jnp.int64).at[order].set(s_depart).reshape(n, h)
 
-    # exact arrival propagation: padded hops pass the previous arrival through
     cols = [issue_ps]
     for j in range(h):
         cols.append(jnp.where(
             hops.valid[:, j], depart[:, j] + hops.fixed_after_ps[:, j], cols[-1]
         ))
     new_arrive = jnp.stack(cols, axis=1)
-    if with_stalls:
+    if s_stall is not None:
         stall = jnp.zeros(k, dtype=jnp.int64).at[order].set(
-            out[2]).reshape(n, h)
+            s_stall).reshape(n, h)
         return new_arrive, start, depart, stall
     return new_arrive, start, depart
 
@@ -435,26 +589,46 @@ def _join_gate(hops: Hops, issue_ps, arrive, join_seed=None):
     return jnp.where(wait, jnp.maximum(issue_ps, gate), issue_ps)
 
 
-@functools.partial(jax.jit, static_argnames=("max_rounds",))
 def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
-             max_rounds: int = 0,
-             carry: StreamCarry | None = None) -> Schedule:
+             options: SimOptions | None = None, *,
+             carry: StreamCarry | None = None,
+             max_rounds: int | None = None) -> Schedule:
     """Resolve the exact FCFS schedule of all transactions.
 
-    max_rounds=0 picks ``3*H + 8`` (always sufficient for chain-only
-    traffic in testing; fork/join tables deepen the dependency graph across
-    rows, so join-heavy lowerings pass an explicit budget or go through
-    ``simulate_auto``).  Convergence is verified and reported in
-    ``Schedule.converged``.
+    ``options`` (`SimOptions`) selects the round budget and the serve-round
+    implementation; ``options=None`` is ``SimOptions()``.  The default
+    budget (``max_rounds=0``) is the computed join-depth-aware
+    `round_bound` — sufficient for every verifier-legal lowering, so
+    convergence is provable rather than hand-tuned; truncated-fixpoint
+    experiments pass an explicit ``SimOptions(max_rounds=...)``.
+    Convergence is reported in ``Schedule.converged`` and the last round's
+    max arrival delta in ``Schedule.residual_ps`` (0 at the fixpoint).
 
     ``carry`` (`StreamCarry`, built by `core.streaming`) seeds the window
     with the per-channel frontier / down-until state and retired join-group
     maxes of everything already settled — the streaming windowed mode.
     ``carry=None`` (the default) traces the exact historical program, so
     non-streaming entry points stay bit- and jit-cache-identical.
+
+    ``max_rounds=`` as a direct kwarg is deprecated (folds into
+    ``options`` with a `DeprecationWarning`).
+
+    The budget is resolved host-side and passed to the jitted fixpoint as
+    a *traced* operand, so sweeping budgets (or growing the computed bound
+    across lowerings of one shape) never recompiles; the
+    ``lax.while_loop`` early-exits on the first unchanged round, so a
+    generous bound costs nothing at runtime.
     """
+    opts = _merge_options("simulate", options, max_rounds=max_rounds)
+    budget = opts.max_rounds if opts.max_rounds > 0 else round_bound(hops)
+    return _simulate_fixpoint(hops, channels, issue_ps, jnp.int64(budget),
+                              carry, opts.kernel_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _simulate_fixpoint(hops: Hops, channels: Channels, issue_ps, rounds,
+                       carry: StreamCarry | None, impl: str) -> Schedule:
     n, h = hops.channel.shape
-    rounds = max_rounds if max_rounds > 0 else 3 * h + 8
     has_join = hops.join_id is not None
     join_seed = carry.join_seed_ps if carry is not None else None
 
@@ -471,25 +645,26 @@ def simulate(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
     )
 
     def cond(state):
-        i, arrive, _, _, changed = state
-        return (i < rounds) & changed
+        i, arrive, _, _, resid = state
+        return (i < rounds) & (resid != 0)
 
     def body(state):
         i, arrive, _, _, _ = state
         eff_issue = (_join_gate(hops, issue_ps, arrive, join_seed)
                      if has_join else issue_ps)
         new_arrive, start, depart = _one_round(hops, channels, eff_issue,
-                                               arrive, carry=carry)
-        changed = jnp.any(new_arrive != arrive)
-        return i + 1, new_arrive, start, depart, changed
+                                               arrive, carry=carry, impl=impl)
+        resid = jnp.max(jnp.abs(new_arrive - arrive))
+        return i + 1, new_arrive, start, depart, resid
 
     z = jnp.zeros((n, h), jnp.int64)
-    i, arrive, start, depart, changed = jax.lax.while_loop(
-        cond, body, (jnp.int64(0), arrive0, z, z, jnp.bool_(True))
+    i, arrive, start, depart, resid = jax.lax.while_loop(
+        cond, body, (jnp.int64(0), arrive0, z, z, jnp.int64(-1))
     )
     return Schedule(
         arrive=arrive, start=start, depart=depart,
-        complete=arrive[:, h], rounds=i, converged=~changed,
+        complete=arrive[:, h], rounds=i, converged=resid == 0,
+        residual_ps=jnp.maximum(resid, 0),
     )
 
 
@@ -521,45 +696,56 @@ def replay_round(hops: Hops, channels: Channels, sched: Schedule,
 # ---------------------------------------------------------------------------
 
 def simulate_auto(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
-                  max_rounds: int = 0, check: bool | str = True,
-                  carry: StreamCarry | None = None) -> tuple[Schedule, bool]:
+                  options: SimOptions | None = None, *,
+                  carry: StreamCarry | None = None,
+                  max_rounds: int | None = None,
+                  check: bool | str | None = None) -> tuple[Schedule, bool]:
     """Exact schedule with oracle fallback.
 
-    The fixpoint converges in O(hops) rounds for feed-forward traffic (the
-    common case: topology sweeps, collective traces).  Tight feedback loops —
-    requests and responses interleaving on one shared half-duplex channel —
-    can converge only a few queue positions per round; rather than burn
-    unbounded rounds, fall back to the event-driven oracle (`core.ref_des`),
-    which is exact by construction and fast at bench sizes.  Returns
-    (schedule, used_oracle).
+    The fixpoint converges within the computed `round_bound` for
+    feed-forward traffic (the common case: topology sweeps, collective
+    traces, join-gated coherence flows).  Tight feedback loops — requests
+    and responses interleaving on one shared half-duplex channel — can
+    converge only a few queue positions per round; rather than burn
+    unbounded rounds, fall back to the event-driven oracle
+    (`core.ref_des`), which is exact by construction and fast at bench
+    sizes.  Returns (schedule, used_oracle).
 
-    ``check=False`` skips the ``bool(sched.converged)`` readback — the only
-    device→host sync on this path.  Callers that already pull the schedule
-    to the host (the streaming driver does, every window, for carry
-    extraction) use it to keep the window pipeline transfer-free and run
-    their own fallback; the returned schedule may then be unconverged.
-    ``check="static"`` additionally runs the fabric-IR verifier
-    (`core.verify`) over the lowered triple *before* tracing anything and
-    raises `verify.VerifyError` on any contract violation — the
-    belt-and-braces mode for tables a third-party lowering produced.
-    ``carry`` threads streaming window state into both the fixpoint and the
-    oracle fallback.
+    ``SimOptions.check`` selects the verification mode:
+
+    "off"     skip the ``bool(sched.converged)`` readback — the only
+              device→host sync on this path.  Callers that already pull
+              the schedule to the host (the streaming driver does, every
+              window, for carry extraction) use it to keep the window
+              pipeline transfer-free and run their own fallback; the
+              returned schedule may then be unconverged.
+    "oracle"  (default) fall back to the oracle on non-convergence.
+    "static"  additionally run the fabric-IR verifier (`core.verify`)
+              over the lowered triple *before* tracing anything and raise
+              `verify.VerifyError` on any contract violation — the
+              belt-and-braces mode for tables a third-party lowering
+              produced.  An explicit round budget below the computed
+              bound is a ``join.depth`` finding.
+
+    ``carry`` threads streaming window state into both the fixpoint and
+    the oracle fallback.  ``max_rounds=`` / ``check=`` direct kwargs are
+    deprecated shims (``check=True`` ≙ "oracle", ``check=False`` ≙ "off").
     """
-    if check == "static":
+    opts = _merge_options("simulate_auto", options, max_rounds=max_rounds,
+                          check=check)
+    if opts.check == "static":
         from . import verify  # local import: host-side checker only
 
-        verify.assert_valid(hops, channels, issue_ps, carry=carry)
-        check = True
-    sched = simulate(hops, channels, issue_ps, max_rounds=max_rounds,
-                     carry=carry)
-    if not check:
+        verify.assert_valid(hops, channels, issue_ps, carry=carry,
+                            max_rounds=opts.max_rounds or None)
+    sched = simulate(hops, channels, issue_ps, opts, carry=carry)
+    if opts.check == "off":
         return sched, False
     if bool(sched.converged):
         return sched, False
     from . import ref_des  # local import: oracle pulls in heapq only
 
     ref = ref_des.simulate_ref(hops, channels, issue_ps, carry=carry)
-    n, h = hops.channel.shape
     return Schedule(
         arrive=jnp.asarray(ref["arrive"]),
         start=jnp.asarray(ref["start"]),
@@ -567,6 +753,7 @@ def simulate_auto(hops: Hops, channels: Channels, issue_ps: jnp.ndarray,
         complete=jnp.asarray(ref["complete"]),
         rounds=sched.rounds,
         converged=jnp.bool_(True),
+        residual_ps=jnp.int64(0),
     ), True
 
 

@@ -63,6 +63,7 @@ def ref_schedule(ref: dict) -> Schedule:
         complete=jnp.asarray(ref["complete"]),
         rounds=jnp.int32(0),
         converged=jnp.bool_(True),
+        residual_ps=jnp.int64(0),
     )
 
 

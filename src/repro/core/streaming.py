@@ -52,6 +52,7 @@ Contracts on the chunk stream (asserted here):
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -60,7 +61,8 @@ import numpy as np
 import jax
 
 from . import ref_des, verify
-from .engine import Channels, Hops, StreamCarry, replay_round, simulate
+from .engine import (Channels, Hops, SimOptions, StreamCarry, replay_round,
+                     round_bound, simulate)
 from .telemetry import (StreamTelemetry, stream_telemetry_finalize,
                         stream_telemetry_fold, stream_telemetry_new)
 
@@ -146,7 +148,15 @@ class StreamResult(NamedTuple):
     in-flight rows at any window edge — and how many windows needed the
     oracle fallback).  ``collected`` (only under ``collect_schedule=True``,
     test scale) holds the settled per-item schedule in global coordinates
-    for bit-exact comparison against a monolithic run."""
+    for bit-exact comparison against a monolithic run.
+
+    ``rounds`` / ``converged`` / ``residual_ps`` are the unified fixpoint
+    diagnostics every entry point reports (`engine.Schedule`,
+    `coherence_traffic.CoupledResult`): total engine rounds across all
+    windows, whether every window's fixpoint converged on its own (a
+    ``False`` here means the oracle fallback resolved some windows), and
+    the residual of the *returned* schedule — always 0 for a stream, since
+    a non-converged window is either oracle-resolved exactly or raises."""
 
     telemetry: StreamTelemetry
     windows: int
@@ -155,6 +165,9 @@ class StreamResult(NamedTuple):
     n_rows: int
     state: StreamState
     collected: dict | None = None
+    rounds: int = 0
+    converged: bool = True
+    residual_ps: int = 0
 
     def summary(self, qs=(0.5, 0.99, 0.999)) -> dict:
         out = stream_telemetry_finalize(self.telemetry, qs)
@@ -189,7 +202,7 @@ def _ensure_layout(state: StreamState, ck_hops: Hops) -> tuple:
 
 
 def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
-                    ck_issue, t_next: int, max_rounds: int, pad_to: int,
+                    ck_issue, t_next: int, opts: SimOptions, pad_to: int,
                     oracle_fallback: bool, collect: dict | None) -> None:
     has_extra, has_retrain, has_join = _ensure_layout(state, ck_hops)
 
@@ -307,8 +320,8 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
     )
 
     # ---- resolve the window from the carried frontier
-    sched = simulate(hops_w, channels, jnp.asarray(issue_w),
-                     max_rounds=max_rounds, carry=carry)
+    sched = simulate(hops_w, channels, jnp.asarray(issue_w), opts,
+                     carry=carry)
     if bool(sched.converged):
         arr = np.asarray(sched.arrive)
         st = np.asarray(sched.start)
@@ -318,8 +331,8 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
         if not oracle_fallback:
             raise RuntimeError(
                 f"window {state.windows} did not converge in "
-                f"{max_rounds or 3 * h_w + 8} rounds "
-                "(oracle_fallback=False)")
+                f"{opts.max_rounds or round_bound(hops_w)} rounds "
+                "(check='off' disables the oracle fallback)")
         ref = ref_des.simulate_ref(hops_w, channels, issue_w, carry=carry)
         arr, st, dp = ref["arrive"], ref["start"], ref["depart"]
         fold_sched = ref_des.ref_schedule(ref)
@@ -466,11 +479,11 @@ def _process_window(state: StreamState, channels: Channels, ck_hops: Hops,
     state.chunk_idx += 1
 
 
-def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
-                    max_rounds: int = 0, pad_to: int = 64,
-                    oracle_fallback: bool = True,
-                    collect_schedule: bool = False,
-                    static_check: bool = True) -> StreamResult:
+def simulate_stream(chunks, channels: Channels, state: StreamState = None,
+                    options: SimOptions | None = None, *,
+                    pad_to: int = 64, collect_schedule: bool = False,
+                    max_rounds: int = None, oracle_fallback: bool = None,
+                    static_check: bool = None) -> StreamResult:
     """Drive a chunked trace through windowed simulation (module docstring).
 
     chunks    iterator/iterable of ``(Hops, issue_ps)`` — e.g.
@@ -482,21 +495,53 @@ def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
     state     carry from a previous call (continues the fold); a fresh
               `StreamState(channels)` when None.  The final window settles
               everything, so each call drains (no rows stay in flight).
+    options   `engine.SimOptions` — the uniform knob set of every entry
+              point.  ``max_rounds=0`` gives each window its computed
+              join-depth bound; ``check`` maps onto the stream's two
+              guards: ``"static"`` (default here) runs the fabric-IR
+              verifier over every incoming chunk *and* keeps the per-window
+              `ref_des` oracle fallback, ``"oracle"`` keeps only the
+              fallback, ``"off"`` disables both (a non-converged window
+              then raises).  The chunk verifier matters because the
+              settlement rule silently mis-settles on tables that break
+              the engine contracts — chunks from third-party lowerings are
+              checked at the door (host-side numpy, a few percent of
+              window cost; raises `verify.VerifyError`).  ``use_kernel``
+              is forwarded to the engine's serve round.
     pad_to    row-count bucket for window shapes — bounds jit recompiles.
     collect_schedule
               accumulate every settled item's (start, depart, arrive) and
               every row's completion/gated-arrival in global coordinates —
               the equivalence-test hook; O(trace) memory, test scale only.
-    static_check
-              run the fabric-IR verifier (`core.verify`) over every
-              incoming chunk before it enters a window — the settlement
-              rule and carry extraction silently mis-settle on tables that
-              break the engine contracts, so chunks from third-party
-              lowerings are checked at the door (host-side numpy, a few
-              percent of window cost).  Raises `verify.VerifyError`.
+    max_rounds / oracle_fallback / static_check
+              deprecated — pass ``options=SimOptions(...)`` instead.
 
     Returns `StreamResult`; tail quantiles via ``result.summary()``.
     """
+    if options is not None and not isinstance(options, SimOptions):
+        raise TypeError(
+            f"options must be a SimOptions, got {type(options).__name__}")
+    check = "static" if options is None else options.check
+    mr = 0 if options is None else options.max_rounds
+    do_static = check == "static"
+    do_oracle = check != "off"
+    for name, val in (("max_rounds", max_rounds),
+                      ("oracle_fallback", oracle_fallback),
+                      ("static_check", static_check)):
+        if val is not None:
+            warnings.warn(
+                f"simulate_stream({name}=...) is deprecated; pass "
+                "options=SimOptions(...) instead",
+                DeprecationWarning, stacklevel=2)
+    if max_rounds is not None:
+        mr = max_rounds
+    if oracle_fallback is not None:
+        do_oracle = oracle_fallback
+    if static_check is not None:
+        do_static = static_check
+    win_opts = SimOptions(
+        max_rounds=mr, check="off",
+        use_kernel=False if options is None else options.use_kernel)
     if state is None:
         state = StreamState(channels)
     collect = {k: [] for k in _COLLECT_KEYS} if collect_schedule else None
@@ -514,7 +559,7 @@ def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
         # it as such rather than as whatever IR findings the odd chunk
         # happens to produce against the shared channel tables
         _ensure_layout(state, cur[0])
-        if static_check:
+        if do_static:
             verify.assert_valid(cur[0], channels, cur[1])
         mn = _min_issue(cur[1])
         if prev_min is not None and mn < prev_min:
@@ -524,8 +569,8 @@ def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
                 "trace")
         prev_min = mn
         t_next = _INT64_MAX if nxt is None else _min_issue(nxt[1])
-        _process_window(state, channels, cur[0], cur[1], t_next, max_rounds,
-                        pad_to, oracle_fallback, collect)
+        _process_window(state, channels, cur[0], cur[1], t_next, win_opts,
+                        pad_to, do_oracle, collect)
         cur = nxt
     if state.carried:
         raise AssertionError(
@@ -539,7 +584,9 @@ def simulate_stream(chunks, channels: Channels, state: StreamState = None, *,
                         carried_peak=state.carried_peak,
                         oracle_windows=state.oracle_windows,
                         n_rows=state.n_rows, state=state,
-                        collected=collected)
+                        collected=collected, rounds=state.rounds_sum,
+                        converged=state.windows_converged == state.windows,
+                        residual_ps=0)
 
 
 def stream_windows(hops: Hops, issue_ps, window_rows: int):

@@ -34,7 +34,8 @@ Contract set (one code family per subsystem):
             engine resolves group maxes with an N-sized scatter);
             ``join_arity`` equals the group's actual contributor count; the
             group graph is a DAG (a cycle deadlocks the oracle and never
-            converges in the engine)
+            converges in the engine); an explicit ``max_rounds`` budget
+            below the computed `round_bound` is flagged (``join.depth``)
   rel.*     reliability tables come as a pair and are non-negative; replay
             bytes only on serving hops; link-down markers are structurally
             valid (zero-byte, not row-managed, zero-turnaround channel,
@@ -561,12 +562,73 @@ def _check_sf_events(ck: _Checker, ev):
 
 
 # ---------------------------------------------------------------------------
+# Round-bound derivation (host-side; engine.round_bound wraps it)
+# ---------------------------------------------------------------------------
+
+def join_depth(join_id, join_wait) -> int:
+    """Longest fork/join chain through rows — the join nesting depth.
+
+    ``depth(p) = 0`` for a row that waits on no group, else ``1 + max``
+    depth of the rows contributing to the group it waits on (0 when the
+    group has no contributors).  The returned value is the maximum over
+    all rows: the number of join *levels* a completion time can cascade
+    through before every gate is final.  Computed by the same
+    release-propagation fixpoint `_check_join` runs for acyclicity —
+    vectorized scatter-max passes, each extending every chain by one
+    level, so a DAG stabilizes in at most N+1 passes.  A cyclic group
+    graph (flagged separately as ``join.cycle``) is capped at N.
+
+    Pure numpy, no engine import — callable at build/verify time.
+    """
+    if join_id is None or join_wait is None:
+        return 0
+    jid = np.asarray(join_id).astype(np.int64)
+    jw = np.asarray(join_wait).astype(np.int64)
+    n = jid.shape[0]
+    if n == 0 or not np.any(jw >= 0):
+        return 0
+    contrib = jid >= 0
+    cid = np.where(contrib, jid, 0)
+    depth = np.zeros(n, np.int64)
+    for _ in range(n + 1):
+        gd = np.zeros(n, np.int64)
+        np.maximum.at(gd, cid[contrib], depth[contrib])
+        new = np.where(jw >= 0, 1 + gd[np.clip(jw, 0, n - 1)], 0)
+        if np.array_equal(new, depth):
+            return int(depth.max())
+        depth = new
+    return n  # cyclic group graph: flagged by join.cycle, cap the bound
+
+
+def round_bound(n_hops: int, join_id=None, join_wait=None) -> int:
+    """Sufficient fixpoint round budget for a lowered workload.
+
+    Chain-only traffic needs at most one round per queue position a delay
+    can cascade through — ``3*H + 8`` covers every chain-only layout in
+    the suite with slack (the engine's historical default).  Each join
+    level re-gates issue times *after* a full sub-schedule resolves, so a
+    join-depth-D lowering needs at most D+1 such phases:
+
+        bound = (join_depth + 1) * (3*H + 8)
+
+    Chain-only lowerings (depth 0) get exactly the historical heuristic;
+    join-heavy coherence lowerings get a budget that provably covers their
+    gating cascade instead of a hand-tuned constant.  Generosity is free
+    at runtime — `engine.simulate` early-exits its ``lax.while_loop`` on
+    the first unchanged round.
+    """
+    per_level = 3 * int(n_hops) + 8
+    return (join_depth(join_id, join_wait) + 1) * per_level
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 
 def verify_workload(hops, channels, issue_ps, *, carry=None, sf_events=None,
                     reliability=None, chan_pair=None,
-                    monotone_issue: bool = False) -> VerifyReport:
+                    monotone_issue: bool = False,
+                    max_rounds: int | None = None) -> VerifyReport:
     """Validate a lowered ``(Hops, Channels, issue_ps)`` triple statically.
 
     Optional extensions widen the contract set actually checked:
@@ -582,6 +644,11 @@ def verify_workload(hops, channels, issue_ps, *, carry=None, sf_events=None,
                    symmetry and marker-pairing checks.
     monotone_issue require non-decreasing issue clocks (the
                    `streaming.stream_windows` input contract).
+    max_rounds     an explicit round budget the caller intends to run the
+                   fixpoint with — flagged as ``join.depth`` when it is
+                   positive but below the computed `round_bound` (the
+                   budget cannot guarantee convergence).  ``None`` / 0
+                   (engine default = computed bound) checks nothing.
 
     Returns a `VerifyReport`; never raises on findings (use `assert_valid`
     or ``report.raise_if_failed()`` for the strict mode).
@@ -611,6 +678,16 @@ def verify_workload(hops, channels, issue_ps, *, carry=None, sf_events=None,
         _check_issue(ck, issue, monotone_issue)
         if carry is not None:
             _check_carry(ck, carry, n_ch, hops)
+        if max_rounds is not None and max_rounds > 0:
+            jid, jw = _np(hops.join_id), _np(hops.join_wait)
+            depth = join_depth(jid, jw)
+            bound = round_bound(_np(hops.channel).shape[1], jid, jw)
+            if max_rounds < bound:
+                ck.add("join.depth",
+                       f"round budget {max_rounds} below the computed "
+                       f"bound {bound} (join depth {depth}) — the fixpoint "
+                       "may report converged=False on traffic the bound "
+                       "provably covers")
     if sf_events is not None:
         _check_sf_events(ck, sf_events)
     return VerifyReport(findings=tuple(ck.findings),

@@ -1,0 +1,1 @@
+"""Pallas TPU kernel package: kernel.py + ops.py + ref.py."""

@@ -1,0 +1,114 @@
+"""Serve-round (max,+) affine scan — the full ESF engine round (Pallas TPU).
+
+One fixpoint round of the schedule engine — turnaround gaps, DRAM
+row-buffer penalties, retraining down-until clocks, link-down markers and
+streaming carry seeds included — reduces to an *unsegmented* associative
+scan once the ops wrapper has done its static pre-pass:
+
+  * the previous direction / DRAM row a sorted item reacts to depend only
+    on the item ordering, never on the departure times, so the turnaround
+    gap and row penalty fold into per-item constants;
+  * what remains dynamic is the two-component channel state
+    ``v = (depart, down_until)``, which every item transforms by a (max,+)
+    affine map ``v' = M (x) v (+) c`` (serving item, link-down marker, or
+    identity pass-through);
+  * segment heads fold their channel's carried seed state into ``c`` and
+    kill the incoming state (``M = NEG``), which removes segmentation from
+    the scan entirely — maps compose across channel boundaries as plain
+    (max,+) matrix products.
+
+The kernel runs a Hillis-Steele inclusive composition scan over VMEM
+blocks (log2(block) shifted combines, VPU-vectorized) and threads an
+absolute ``(depart, down)`` state across blocks in scratch (sequential
+grid).  Times are int32: the ops wrapper rebases the engine's int64
+picoseconds to the round's minimum arrival, whose span must stay under
+2**29 so composed sums never overflow (compositions add at most two
+rebased times before the ``NEG`` saturation clamp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -(2 ** 30)  # tropical -inf; python int keeps the kernel const-free
+
+
+def _serve_kernel(m00_ref, m01_ref, m10_ref, m11_ref, c0_ref, c1_ref,
+                  d_ref, carry_d, carry_w, *, blk: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_d[...] = jnp.full_like(carry_d, NEG)
+        carry_w[...] = jnp.full_like(carry_w, NEG)
+
+    m00 = m00_ref[...]
+    m01 = m01_ref[...]
+    m10 = m10_ref[...]
+    m11 = m11_ref[...]
+    c0 = c0_ref[...]
+    c1 = c1_ref[...]
+
+    # Hillis-Steele inclusive scan of map composition; shifted-in slots are
+    # the identity map (M = [[0, NEG], [NEG, 0]], c = NEG)
+    k = 1
+    while k < blk:
+        def sh(x, fill, k=k):
+            return jnp.concatenate(
+                [jnp.full((k,), fill, jnp.int32), x[:-k]])
+        p00, p01 = sh(m00, 0), sh(m01, NEG)
+        p10, p11 = sh(m10, NEG), sh(m11, 0)
+        q0, q1 = sh(c0, NEG), sh(c1, NEG)
+        # (M, c) := (M, c) . (P, q) — P applied first:
+        #   M' = M (x) P,  c' = M (x) q (+) c   (all saturated at NEG)
+        n00 = jnp.maximum(jnp.maximum(m00 + p00, m01 + p10), NEG)
+        n01 = jnp.maximum(jnp.maximum(m00 + p01, m01 + p11), NEG)
+        n10 = jnp.maximum(jnp.maximum(m10 + p00, m11 + p10), NEG)
+        n11 = jnp.maximum(jnp.maximum(m10 + p01, m11 + p11), NEG)
+        nc0 = jnp.maximum(jnp.maximum(m00 + q0, m01 + q1), c0)
+        nc1 = jnp.maximum(jnp.maximum(m10 + q0, m11 + q1), c1)
+        m00, m01, m10, m11 = n00, n01, n10, n11
+        c0 = jnp.maximum(nc0, NEG)
+        c1 = jnp.maximum(nc1, NEG)
+        k *= 2
+
+    # apply the block-prefix maps to the inter-block absolute state
+    d_in = carry_d[0]
+    w_in = carry_w[0]
+    d = jnp.maximum(jnp.maximum(m00 + d_in, m01 + w_in), c0)
+    w = jnp.maximum(jnp.maximum(m10 + d_in, m11 + w_in), c1)
+    d_ref[...] = d
+    carry_d[0] = d[blk - 1]
+    carry_w[0] = w[blk - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def serve_scan(m00, m01, m10, m11, c0, c1, *, blk: int = 2048,
+               interpret: bool = False):
+    """Six (K,) int32 map components -> (K,) int32 depart state per item."""
+    k = m00.shape[0]
+    pad = (-k) % blk
+    if pad:
+        def ext(x, fill):
+            return jnp.concatenate([x, jnp.full((pad,), fill, jnp.int32)])
+        m00, m11 = ext(m00, 0), ext(m11, 0)
+        m01, m10 = ext(m01, NEG), ext(m10, NEG)
+        c0, c1 = ext(c0, NEG), ext(c1, NEG)
+    n = m00.shape[0]
+    steps = n // blk
+    out = pl.pallas_call(
+        functools.partial(_serve_kernel, blk=blk),
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))] * 6,
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int32),
+                        pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(m00, m01, m10, m11, c0, c1)
+    return out[:k]

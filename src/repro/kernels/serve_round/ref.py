@@ -1,0 +1,37 @@
+"""Oracle for the serve-round affine scan: direct lax.scan composition.
+
+One step applies item ``i``'s (max,+) affine map to the running channel
+state ``v = (depart, down)``:
+
+    v' = M_i (x) v  (+)  c_i        (x) = tropical matmul, (+) = max
+
+with saturation at ``NEG`` (the tropical -inf sentinel shared with the
+kernel).  The ops wrapper builds the per-item maps; this oracle is the
+sequential ground truth the Hillis-Steele kernel must match bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -(2 ** 30)
+
+
+def serve_scan_ref(m00, m01, m10, m11, c0, c1):
+    """Inclusive scan of the affine-map composition; returns the depart
+    state component per item (int32)."""
+
+    def step(v, m):
+        d, w = v
+        a00, a01, a10, a11, b0, b1 = m
+        d2 = jnp.maximum(jnp.maximum(a00 + d, a01 + w), b0)
+        w2 = jnp.maximum(jnp.maximum(a10 + d, a11 + w), b1)
+        d2 = jnp.maximum(d2, NEG)
+        w2 = jnp.maximum(w2, NEG)
+        return (d2, w2), d2
+
+    (_, _), d = jax.lax.scan(
+        step, (jnp.int32(NEG), jnp.int32(NEG)),
+        (m00, m01, m10, m11, c0, c1))
+    return d

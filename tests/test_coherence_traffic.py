@@ -16,7 +16,7 @@ from repro.core.coherence_traffic import (CoherenceFabricSpec,
                                           concat_background, lower_coherence,
                                           pad_rows, simulate_coupled)
 from repro.core.devices import RequesterSpec, build_workload
-from repro.core.engine import make_channels, simulate
+from repro.core.engine import SimOptions, make_channels, simulate
 from repro.core.ref_des import simulate_ref
 from repro.core.snoop_filter import (CacheConfig, SFConfig,
                                      make_skewed_stream, simulate_sf)
@@ -138,7 +138,7 @@ def test_coupled_engine_matches_oracle(seed, fanout):
         "case has no BISnp traffic; pick different parameters"
     ch = make_channels(graph)
     issue = coherence_issue(low, ev.fab_issue_ps)
-    sched = simulate(low.hops, ch, issue, max_rounds=400)
+    sched = simulate(low.hops, ch, issue)
     ref = simulate_ref(low.hops, ch, np.asarray(issue))
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -161,7 +161,7 @@ def test_coupled_with_background_engine_matches_oracle(fanout):
     hops, issue = concat_background(
         low, coherence_issue(low, ev.fab_issue_ps), bg)
     ch = make_channels(graph)
-    sched = simulate(hops, ch, issue, max_rounds=400)
+    sched = simulate(hops, ch, issue)
     ref = simulate_ref(hops, ch, np.asarray(issue))
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -186,8 +186,7 @@ def test_chain_fanout_bitexact_golden(n_req):
                         n_requesters=n_req, return_events=True)
     low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev, fanout="chain")
     assert low.hops.join_id is None          # chain layout carries no joins
-    sched = simulate(low.hops, make_channels(graph), ev.fab_issue_ps,
-                     max_rounds=400)
+    sched = simulate(low.hops, make_channels(graph), ev.fab_issue_ps)
     assert bool(sched.converged)
     comp = np.asarray(sched.complete)
     st = np.asarray(sched.start)
@@ -214,7 +213,7 @@ def test_concurrent_joins_on_slowest_birsp():
         low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev,
                               fanout=fanout, upgrade_bisnp=False)
         issue = coherence_issue(low, ev.fab_issue_ps)
-        sched = simulate(low.hops, ch, issue, max_rounds=400)
+        sched = simulate(low.hops, ch, issue)
         assert bool(sched.converged)
         t = low.miss.shape[0]
         lats[fanout] = (np.asarray(sched.complete[:t])
@@ -269,10 +268,9 @@ def test_upgrade_bisnp_rows_lowered_and_timing_preserved():
 
     ch = make_channels(graph)
     s_on = simulate(low_on.hops, ch,
-                    coherence_issue(low_on, ev.fab_issue_ps), max_rounds=400)
+                    coherence_issue(low_on, ev.fab_issue_ps))
     s_off = simulate(low_off.hops, ch,
-                     coherence_issue(low_off, ev.fab_issue_ps),
-                     max_rounds=400)
+                     coherence_issue(low_off, ev.fab_issue_ps))
     assert bool(s_on.converged) and bool(s_off.converged)
     ref = simulate_ref(low_on.hops, ch,
                        np.asarray(coherence_issue(low_on, ev.fab_issue_ps)))
@@ -300,8 +298,8 @@ def test_pad_rows_preserves_schedule():
     padded = pad_rows(low.hops, n + 37)
     issue_p = jnp.concatenate([issue, jnp.zeros(37, jnp.int64)])
     ch = make_channels(graph)
-    s0 = simulate(low.hops, ch, issue, max_rounds=400)
-    s1 = simulate(padded, ch, issue_p, max_rounds=400)
+    s0 = simulate(low.hops, ch, issue)
+    s1 = simulate(padded, ch, issue_p)
     assert bool(s0.converged) and bool(s1.converged)
     assert np.array_equal(np.asarray(s0.complete),
                           np.asarray(s1.complete)[:n])
@@ -424,8 +422,7 @@ def test_lowering_column_map_survives_retrain_markers():
     svc_phys = low.col_map[np.arange(nb.shape[0]), low.svc_col]
     assert (nb[np.arange(nb.shape[0]), svc_phys][low.miss]
             == cfg.line_bytes).all()
-    sched = simulate(low.hops, make_channels(graph), ev.fab_issue_ps,
-                     max_rounds=400)
+    sched = simulate(low.hops, make_channels(graph), ev.fab_issue_ps)
     ref = simulate_ref(low.hops, make_channels(graph), ev.fab_issue_ps)
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -447,7 +444,7 @@ def test_concurrent_lowering_survives_retrain_markers():
     low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev)
     assert np.asarray(low.hops.retrain_after_ps).any()
     issue = coherence_issue(low, ev.fab_issue_ps)
-    sched = simulate(low.hops, make_channels(graph), issue, max_rounds=400)
+    sched = simulate(low.hops, make_channels(graph), issue)
     ref = simulate_ref(low.hops, make_channels(graph), np.asarray(issue))
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -511,13 +508,13 @@ def test_damped_fixpoint_converges_where_picard_oscillates():
     (average of the last two latency vectors) converges within tol_ps and
     lands within a few ps of the exact fixpoint."""
     graph, spec, addr, wr, rid, cfg = _oscillating_config()
-    kw = dict(n_requesters=2, max_iters=33, tol_ps=2_000, max_rounds=1500)
+    kw = dict(n_requesters=2, max_iters=33, tol_ps=2_000)
     raw = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=8),
-                           graph, spec, damping=False, **kw)
+                           graph, spec, options=SimOptions(damping=False), **kw)
     assert not raw.converged, \
         "config converges undamped now — find a new oscillating config"
     damped = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=8),
-                              graph, spec, damping=True, **kw)
+                              graph, spec, options=SimOptions(damping=True), **kw)
     assert damped.converged and damped.damped > 0
     # the damped answer is the true fixpoint within the tolerance: the
     # undamped loop does converge exactly given ~39 iterations, and the
@@ -525,7 +522,7 @@ def test_damped_fixpoint_converges_where_picard_oscillates():
     # vs the ~600,000 ps the raw iteration still oscillates by)
     exact = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=8),
                              graph, spec, n_requesters=2, max_iters=60,
-                             tol_ps=0, max_rounds=1500, damping=False)
+                             tol_ps=0, options=SimOptions(damping=False))
     assert exact.converged
     diff = np.abs(np.asarray(damped.fabric_lat_ps, np.int64)
                   - np.asarray(exact.fabric_lat_ps, np.int64))
@@ -543,13 +540,13 @@ def test_damping_off_is_default_and_identical():
                          graph, spec, n_requesters=2, max_iters=10)
     b = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=48),
                          graph, spec, n_requesters=2, max_iters=10,
-                         damping=False)
+                         options=SimOptions(damping=False))
     assert a.converged and a.damped == 0
     assert np.array_equal(np.asarray(a.fabric_lat_ps),
                           np.asarray(b.fabric_lat_ps))
     c = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=48),
                          graph, spec, n_requesters=2, max_iters=40,
-                         tol_ps=2_000, damping=True)
+                         tol_ps=2_000, options=SimOptions(damping=True))
     assert c.converged
     assert int(np.abs(np.asarray(c.fabric_lat_ps)
                       - np.asarray(a.fabric_lat_ps)).max()) <= 2_000
@@ -595,7 +592,7 @@ def _marker_case(seed, c=4):
 @pytest.mark.parametrize("seed", range(8))
 def test_link_down_markers_engine_matches_oracle(seed):
     hops, ch, issue = _marker_case(seed)
-    sched = simulate(hops, ch, jnp.asarray(issue), max_rounds=300)
+    sched = simulate(hops, ch, jnp.asarray(issue))
     ref = simulate_ref(hops, ch, issue)
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -628,10 +625,10 @@ def test_retraining_downs_both_directions_of_full_duplex():
     trig = (rt > 0) & ~mk & np.asarray(wl.hops.valid)
     assert set(chn[mk]) <= set(int(pair[c]) for c in chn[trig])
     # and the mirrored stall delays the schedule vs markers stripped out
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     no_mark = wl.hops._replace(
         retrain_after_ps=jnp.asarray(np.where(mk, 0, rt)))
-    sched0 = simulate(no_mark, wl.channels, wl.issue_ps, max_rounds=200)
+    sched0 = simulate(no_mark, wl.channels, wl.issue_ps)
     assert bool(sched.converged) and bool(sched0.converged)
     # mirrored stalls delay the run in aggregate (per-row monotonicity is
     # not guaranteed: a delayed transaction can yield a channel to another)
@@ -697,7 +694,7 @@ def test_credit_dllp_emits_reverse_hops_and_stays_oracle_exact():
     d = np.asarray(wl.hops.nbytes)[wl.requester < 0]
     assert (d[:, 0] == CREDIT_DLLP_B).all() and not d[:, 1:].any()
     # schedule stays engine == oracle
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -705,7 +702,7 @@ def test_credit_dllp_emits_reverse_hops_and_stays_oracle_exact():
     g0 = T.with_flit(T.single_bus(n_mems=2, bw_MBps=128_000),
                      FlitConfig("flit256")).build()
     wl0 = build_workload(g0, [spec], warmup_frac=0.0)
-    s0 = simulate(wl0.hops, wl0.channels, wl0.issue_ps, max_rounds=200)
+    s0 = simulate(wl0.hops, wl0.channels, wl0.issue_ps)
     busy = np.asarray(channel_stats(wl.hops, sched, wl.channels)["busy_ps"])
     busy0 = np.asarray(channel_stats(wl0.hops, s0, wl0.channels)["busy_ps"])
     rev = np.asarray(np.unique(np.asarray(wl.hops.channel)[wl.requester < 0, 0]))

@@ -39,14 +39,14 @@ CASES = {"random": _random_case, "rel": _reliability_case,
          "join": _join_case}
 
 
-def _resolve(hops, ch, issue, max_rounds=400):
-    sched = simulate(hops, ch, jnp.asarray(issue), max_rounds=max_rounds)
+def _resolve(hops, ch, issue):
+    sched = simulate(hops, ch, jnp.asarray(issue))
     assert bool(sched.converged)
     return sched
 
 
-def _extract(hops, ch, issue, max_rounds=400):
-    sched = _resolve(hops, ch, issue, max_rounds=max_rounds)
+def _extract(hops, ch, issue):
+    sched = _resolve(hops, ch, issue)
     return sched, cp.extract_backpointers(hops, ch, sched, issue)
 
 
@@ -240,8 +240,7 @@ def test_streamed_blame_equals_monolithic(seed, window, family):
     hops, ch, issue = CASES[family](seed)
     sched = _resolve(hops, ch, issue)
     mb = tm.channel_blame(hops, ch, sched, jnp.asarray(issue))
-    out = simulate_stream(stream_windows(hops, issue, window), ch,
-                          max_rounds=400)
+    out = simulate_stream(stream_windows(hops, issue, window), ch)
     sb = out.summary()["blame"]
     for key in ("queue_ps", "retrain_ps", "wire_ps", "row_extra_ps"):
         assert np.array_equal(np.asarray(sb[key]),
@@ -257,14 +256,13 @@ def test_streamed_peak_backlog_equals_monolithic(seed, window, family):
     hops, ch, issue = CASES[family](seed)
     sched = _resolve(hops, ch, issue)
     mono = np.asarray(tm.channel_telemetry(hops, ch, sched).peak_backlog)
-    out = simulate_stream(stream_windows(hops, issue, window), ch,
-                          max_rounds=400)
+    out = simulate_stream(stream_windows(hops, issue, window), ch)
     assert np.array_equal(np.asarray(out.summary()["peak_backlog"]), mono)
 
 
 def test_stream_fixpoint_diagnostics():
     hops, ch, issue = _random_case(2)
-    out = simulate_stream(stream_windows(hops, issue, 5), ch, max_rounds=400)
+    out = simulate_stream(stream_windows(hops, issue, 5), ch)
     s = out.summary()
     assert s["windows_converged"] == out.windows
     assert s["rounds_sum"] >= out.windows >= 1

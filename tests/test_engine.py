@@ -7,8 +7,8 @@ from _hyp_compat import given, settings, st  # optional-hypothesis shim
 import jax.numpy as jnp
 
 import repro.core  # noqa: F401
-from repro.core.engine import (Channels, Hops, channel_stats, request_stats,
-                               simulate, simulate_auto)
+from repro.core.engine import (Channels, Hops, SimOptions, channel_stats,
+                               request_stats, simulate, simulate_auto)
 from repro.core.ref_des import simulate_ref
 
 
@@ -56,7 +56,7 @@ def test_simulate_auto_oracle_fallback_matches():
     hops, ch, issue, _ = _random_case(7)
     # force the fallback by allowing a single round
     sched, used_oracle = simulate_auto(hops, ch, jnp.asarray(issue),
-                                       max_rounds=1)
+                                       SimOptions(max_rounds=1))
     ref = simulate_ref(hops, ch, issue)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
 
@@ -159,7 +159,7 @@ def _join_case(seed, layers=3):
 @pytest.mark.parametrize("seed", range(10))
 def test_fork_join_engine_matches_oracle(seed):
     hops, ch, issue = _join_case(seed)
-    sched = simulate(hops, ch, jnp.asarray(issue), max_rounds=400)
+    sched = simulate(hops, ch, jnp.asarray(issue))
     ref = simulate_ref(hops, ch, issue)
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -188,7 +188,7 @@ def test_join_waits_for_slowest_contributor():
                 join_wait=jnp.asarray(np.array([-1, -1, 1], np.int32)),
                 join_arity=jnp.asarray(np.array([0, 0, 2], np.int32)))
     issue = jnp.asarray(np.array([0, 0, 0], np.int64))
-    sched = simulate(hops, ch, issue, max_rounds=100)
+    sched = simulate(hops, ch, issue)
     assert bool(sched.converged)
     comp = np.asarray(sched.complete)
     # ser = bytes*1e6/1000 MBps: row0 = 100_000+7_000, row1 = 300_000+11_000

@@ -172,3 +172,147 @@ def test_depart_times_int64_rebase():
                        jnp.asarray(ser), impl="ref")
     assert np.array_equal(np.asarray(out), np.asarray(ref))
     assert np.asarray(out).min() >= (7 << 40)
+
+
+# ---------------------------------------------------------------------------
+# serve round (full engine round as a (max,+) affine scan)
+# ---------------------------------------------------------------------------
+
+from repro.core.engine import SimOptions, simulate as engine_simulate  # noqa: E402
+from repro.core.ref_des import simulate_ref  # noqa: E402
+from repro.core.streaming import simulate_stream, stream_windows  # noqa: E402
+from repro.kernels.serve_round.kernel import NEG, serve_scan  # noqa: E402
+from repro.kernels.serve_round.ref import serve_scan_ref  # noqa: E402
+
+
+@given(st.integers(8, 500), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_serve_scan_property(k, seed):
+    """Pallas Hillis-Steele composition scan == sequential lax.scan oracle,
+    exactly, over random streams of the four map shapes the ops wrapper
+    emits (head / serving / marker / pass-through).  Arbitrary saturated
+    maps are NOT associative in the tropical -inf garbage region; the
+    well-formed shapes keep the state non-negative from the head onward,
+    which is the kernel's documented contract."""
+    rng = np.random.default_rng(seed)
+
+    def pick(hi):
+        return rng.integers(0, hi, k).astype(np.int32)
+
+    kind = rng.integers(0, 4, k)
+    kind[0] = 0  # stream starts at a segment head
+    neg = np.full(k, NEG, np.int32)
+    zero = np.zeros(k, np.int32)
+    # magnitudes keep the total round span inside the 2**29 contract
+    s, gap, r, arr = pick(1 << 16), pick(1 << 16), pick(1 << 16), pick(1 << 20)
+    has_r = rng.random(k) < 0.5
+    rp = np.where(has_r, r, NEG)
+    # serving map (kind 1)
+    m00, m01, c0 = gap + s, s, arr + s
+    m10 = np.maximum(m00 + rp, NEG)
+    m11 = np.maximum(np.maximum(s + rp, 0), NEG)
+    c1 = np.maximum(c0 + rp, NEG)
+    # marker (kind 2): identity on depart, raise down to arr + r
+    m00 = np.where(kind == 2, zero, m00)
+    m01 = np.where(kind == 2, neg, m01)
+    c0 = np.where(kind == 2, neg, c0)
+    m10 = np.where(kind == 2, neg, m10)
+    m11 = np.where(kind == 2, zero, m11)
+    c1 = np.where(kind == 2, arr + r, c1)
+    # pass-through (kind 3): full identity
+    m00 = np.where(kind == 3, zero, m00)
+    m01 = np.where(kind == 3, neg, m01)
+    c0 = np.where(kind == 3, neg, c0)
+    m10 = np.where(kind == 3, neg, m10)
+    m11 = np.where(kind == 3, zero, m11)
+    c1 = np.where(kind == 3, neg, c1)
+    # head (kind 0): seed folded into c, incoming state killed
+    m00 = np.where(kind == 0, neg, m00)
+    m01 = np.where(kind == 0, neg, m01)
+    m10 = np.where(kind == 0, neg, m10)
+    m11 = np.where(kind == 0, neg, m11)
+    c0 = np.where(kind == 0, arr, c0)
+    c1 = np.where(kind == 0, arr + np.where(has_r, r, 0), c1)
+    args = [jnp.asarray(a) for a in (m00, m01, m10, m11, c0, c1)]
+    out = serve_scan(*args, blk=64, interpret=True)
+    ref = serve_scan_ref(*args)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def _engine_case(seed, **kw):
+    from test_engine import _random_case
+    hops, ch, issue, _ = _random_case(seed, **kw)
+    return hops, ch, issue
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_serve_round_kernel_bitexact_random(seed):
+    """simulate(use_kernel='ref') == the lax-scan path == the oracle, on
+    random demand configs with rows, turnaround flips and zero-byte hops."""
+    hops, ch, issue = _engine_case(seed)
+    lax_s = engine_simulate(hops, ch, jnp.asarray(issue))
+    ker_s = engine_simulate(hops, ch, jnp.asarray(issue),
+                            SimOptions(use_kernel="ref"))
+    ref = simulate_ref(hops, ch, issue)
+    for f in ("start", "depart", "arrive", "complete"):
+        assert np.array_equal(np.asarray(getattr(lax_s, f)),
+                              np.asarray(getattr(ker_s, f))), f
+    assert np.array_equal(np.asarray(ker_s.complete), ref["complete"])
+
+
+def test_serve_round_kernel_interpret_mode():
+    """The actual Pallas kernel (interpret mode off-TPU) agrees with the
+    lax path bit for bit."""
+    hops, ch, issue = _engine_case(123)
+    lax_s = engine_simulate(hops, ch, jnp.asarray(issue))
+    pal_s = engine_simulate(hops, ch, jnp.asarray(issue),
+                            SimOptions(use_kernel="interpret"))
+    for f in ("start", "depart", "arrive", "complete"):
+        assert np.array_equal(np.asarray(getattr(lax_s, f)),
+                              np.asarray(getattr(pal_s, f))), f
+
+
+@pytest.mark.parametrize("ber", [1e-4, 3e-4])
+def test_serve_round_kernel_reliability_markers(ber):
+    """Stochastic reliability configs: sampled replay bytes, retraining
+    down-until clocks and link-down marker rows all flow through the
+    (max,+) maps bit-exactly."""
+    from test_link_reliability import _stochastic, _wl
+    wl = _wl(_stochastic(ber), n=60)
+    lax_s = engine_simulate(wl.hops, wl.channels, wl.issue_ps)
+    ker_s = engine_simulate(wl.hops, wl.channels, wl.issue_ps,
+                            SimOptions(use_kernel="ref"))
+    ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
+    for f in ("start", "depart", "arrive", "complete"):
+        assert np.array_equal(np.asarray(getattr(lax_s, f)),
+                              np.asarray(getattr(ker_s, f))), f
+    assert np.array_equal(np.asarray(ker_s.complete), ref["complete"])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_serve_round_kernel_fork_join(seed):
+    from test_engine import _join_case
+    hops, ch, issue = _join_case(seed)
+    lax_s = engine_simulate(hops, ch, jnp.asarray(issue))
+    ker_s = engine_simulate(hops, ch, jnp.asarray(issue),
+                            SimOptions(use_kernel="ref"))
+    for f in ("start", "depart", "arrive", "complete"):
+        assert np.array_equal(np.asarray(getattr(lax_s, f)),
+                              np.asarray(getattr(ker_s, f))), f
+
+
+def test_serve_round_kernel_stream_carry():
+    """Windowed streaming with warm carries: the kernel path reproduces the
+    monolithic lax schedule through every window boundary."""
+    from test_engine import _join_case
+    hops, ch, issue = _join_case(9)
+    mono = engine_simulate(hops, ch, jnp.asarray(issue))
+    out = simulate_stream(stream_windows(hops, np.asarray(issue), 6), ch,
+                          options=SimOptions(use_kernel="ref"),
+                          collect_schedule=True)
+    assert out.converged
+    col = out.collected
+    r = col["item_row"].astype(np.int64)
+    k = col["item_hop"].astype(np.int64)
+    assert np.array_equal(col["item_depart"], np.asarray(mono.depart)[r, k])
+    assert np.array_equal(col["item_start"], np.asarray(mono.start)[r, k])

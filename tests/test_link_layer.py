@@ -86,7 +86,7 @@ def test_replay_ppm_clamped_at_extreme_ber():
     wl = build_workload(g, [RequesterSpec(node=0, n_requests=6, targets=[2, 3],
                                           payload_bytes=944)],
                         warmup_frac=0.0)
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=60)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
     assert int(jnp.max(sched.complete)) > 0
@@ -295,7 +295,7 @@ def test_vmapped_ber_sweep_monotone_one_jit():
 
     def one(ppm):
         ch = wl.channels._replace(replay_ppm=jnp.where(link, ppm, 0))
-        s = simulate(wl.hops, ch, wl.issue_ps, max_rounds=80)
+        s = simulate(wl.hops, ch, wl.issue_ps)
         return jnp.max(s.complete), s.converged
 
     makespan, conv = jax.vmap(one)(ppms)

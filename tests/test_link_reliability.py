@@ -104,7 +104,7 @@ def test_extreme_ber_clamped_not_crashing():
     assert extra.sum() / n_flits.sum() <= 2 * MAX_REPLAY_PPM / PPM
     # and the whole build + engine==oracle path holds at that BER
     wl = _wl(_stochastic(0.05), n=20)
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=160)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
 
@@ -161,8 +161,8 @@ def test_expected_mode_ignores_reliability_knobs_bitexact():
                          rel_seed=99, retrain_threshold=4))
     assert wl1.hops.extra_wire_bytes is None
     assert wl1.hops.retrain_after_ps is None
-    s0 = simulate(wl0.hops, wl0.channels, wl0.issue_ps, max_rounds=120)
-    s1 = simulate(wl1.hops, wl1.channels, wl1.issue_ps, max_rounds=120)
+    s0 = simulate(wl0.hops, wl0.channels, wl0.issue_ps)
+    s1 = simulate(wl1.hops, wl1.channels, wl1.issue_ps)
     assert np.array_equal(np.asarray(s0.complete), np.asarray(s1.complete))
     assert np.array_equal(np.asarray(s0.start), np.asarray(s1.start))
 
@@ -174,8 +174,8 @@ def test_zero_ber_stochastic_matches_deterministic_exactly():
     assert wl_s.hops.extra_wire_bytes is not None
     assert not np.asarray(wl_s.hops.extra_wire_bytes).any()
     assert not np.asarray(wl_s.hops.retrain_after_ps).any()
-    s_e = simulate(wl_e.hops, wl_e.channels, wl_e.issue_ps, max_rounds=120)
-    s_s = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps, max_rounds=120)
+    s_e = simulate(wl_e.hops, wl_e.channels, wl_e.issue_ps)
+    s_s = simulate(wl_s.hops, wl_s.channels, wl_s.issue_ps)
     assert np.array_equal(np.asarray(s_e.complete), np.asarray(s_s.complete))
     assert np.array_equal(np.asarray(s_e.start), np.asarray(s_s.start))
 
@@ -200,7 +200,7 @@ def test_stochastic_engine_matches_oracle_exactly():
     wl = _wl(_stochastic(3e-4), n=200)
     assert np.asarray(wl.hops.extra_wire_bytes).any()    # bursts sampled
     assert np.asarray(wl.hops.retrain_after_ps).any()    # stalls sampled
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=160)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     ref = simulate_ref(wl.hops, wl.channels, wl.issue_ps)
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -243,7 +243,7 @@ def test_random_retrain_tables_engine_matches_oracle(seed):
                 extra_wire_bytes=jnp.asarray(extra),
                 retrain_after_ps=jnp.asarray(retrain))
     issue = np.sort(rng.integers(0, 5000, n)).astype(np.int64)
-    sched = simulate(hops, ch, jnp.asarray(issue), max_rounds=160)
+    sched = simulate(hops, ch, jnp.asarray(issue))
     ref = simulate_ref(hops, ch, issue)
     assert bool(sched.converged)
     assert np.array_equal(np.asarray(sched.complete), ref["complete"])
@@ -279,8 +279,8 @@ def test_workload_override_path_matches_graph_path():
                           np.asarray(wl_o.hops.extra_wire_bytes))
     assert np.array_equal(np.asarray(wl_g.hops.retrain_after_ps),
                           np.asarray(wl_o.hops.retrain_after_ps))
-    sg = simulate(wl_g.hops, wl_g.channels, wl_g.issue_ps, max_rounds=160)
-    so = simulate(wl_o.hops, wl_o.channels, wl_o.issue_ps, max_rounds=160)
+    sg = simulate(wl_g.hops, wl_g.channels, wl_g.issue_ps)
+    so = simulate(wl_o.hops, wl_o.channels, wl_o.issue_ps)
     assert np.array_equal(np.asarray(sg.complete), np.asarray(so.complete))
 
 
@@ -313,10 +313,8 @@ def test_retraining_stalls_delay_schedule():
         np.asarray(strip_retrain_markers(wl_on.hops).extra_wire_bytes))
     assert not np.asarray(wl_off.hops.retrain_after_ps).any()
     assert np.asarray(wl_on.hops.retrain_after_ps).any()
-    s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps,
-                     max_rounds=160)
-    s_on = simulate(wl_on.hops, wl_on.channels, wl_on.issue_ps,
-                    max_rounds=160)
+    s_off = simulate(wl_off.hops, wl_off.channels, wl_off.issue_ps)
+    s_on = simulate(wl_on.hops, wl_on.channels, wl_on.issue_ps)
     assert int(jnp.max(s_on.complete)) > int(jnp.max(s_off.complete))
     assert bool((s_on.complete >= s_off.complete).all())
 

@@ -1,0 +1,275 @@
+"""Provable round bounds + the unified SimOptions surface.
+
+Covers the join-depth-aware round budget (`verify.join_depth` /
+`engine.round_bound`): sufficiency — the computed budget converges with
+zero residual across random demand, fork/join DAG, coherence-lowered and
+streamed-carry workloads; tightness — on chain-only tables the bound is
+exactly the legacy ``3*H + 8`` heuristic, so the computed default never
+asks for more rounds than the old magic number did; the ``join.depth``
+verifier finding; and the one-options-object API: every entry point
+accepts `SimOptions`, every result type reports ``rounds`` /
+``converged`` / ``residual_ps``, and the historical kwargs warn.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st  # optional-hypothesis shim
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  (x64)
+from repro.core import topology as T
+from repro.core.coherence_traffic import (CoherenceFabricSpec,
+                                          coherence_issue, lower_coherence,
+                                          simulate_coupled)
+from repro.core.engine import (Hops, SimOptions, make_channels, round_bound,
+                               simulate, simulate_auto)
+from repro.core.snoop_filter import (CacheConfig, SFConfig,
+                                     make_skewed_stream, simulate_sf)
+from repro.core.streaming import simulate_stream, stream_windows
+from repro.core.verify import join_depth, verify_workload
+from repro.core.verify import round_bound as verify_round_bound
+from test_engine import _join_case, _random_case, _tight_feedback_case
+
+
+def _star(n_req=2, bw=64_000, fixed=26_000):
+    kinds = [T.SWITCH] + [T.REQUESTER] * n_req + [T.MEMORY]
+    links = [T.LinkSpec(i, 0, bw, fixed) for i in range(1, len(kinds))]
+    graph = T.Topology(np.asarray(kinds, np.int64), links,
+                       name="star").build()
+    spec = CoherenceFabricSpec(dev_node=n_req + 1,
+                               req_nodes=tuple(range(1, n_req + 1)))
+    return graph, spec
+
+
+# ---------------------------------------------------------------------------
+# join_depth: the release-propagation fixpoint over the group DAG
+# ---------------------------------------------------------------------------
+
+def test_join_depth_no_joins():
+    assert join_depth(None, None) == 0
+    assert join_depth(np.full(4, -1, np.int32), np.full(4, -1, np.int32)) == 0
+
+
+def test_join_depth_single_level():
+    # two contributors feed group 0; one waiter
+    jid = np.asarray([0, 0, -1], np.int32)
+    jw = np.asarray([-1, -1, 0], np.int32)
+    assert join_depth(jid, jw) == 1
+
+
+def test_join_depth_layered_chain():
+    # row k waits on group k-1 and contributes to group k: depth = n-1
+    n = 6
+    jid = np.arange(n, dtype=np.int32)
+    jid[-1] = -1
+    jw = np.arange(-1, n - 1, dtype=np.int32)
+    assert join_depth(jid, jw) == n - 1
+
+
+def test_join_depth_cycle_capped():
+    # A waits on B's group, B waits on A's group — the verifier flags this
+    # as join.cycle; the depth helper must terminate with the N cap
+    jid = np.asarray([0, 1], np.int32)
+    jw = np.asarray([1, 0], np.int32)
+    assert join_depth(jid, jw) == 2
+
+
+def test_round_bound_chain_only_equals_legacy_heuristic():
+    """Tightness: without joins the computed bound IS the old 3H+8 magic."""
+    for h in (1, 4, 9):
+        assert verify_round_bound(h) == 3 * h + 8
+    hops, _, _, _ = _random_case(3)
+    assert round_bound(hops) == 3 * int(hops.channel.shape[1]) + 8
+
+
+def test_round_bound_scales_with_join_depth():
+    hops, ch, issue = _join_case(11)
+    h = int(hops.channel.shape[1])
+    d = join_depth(np.asarray(hops.join_id), np.asarray(hops.join_wait))
+    assert d >= 1
+    assert round_bound(hops) == (d + 1) * (3 * h + 8)
+
+
+def test_round_bound_stacked_tables_take_member_max():
+    a, _, _ = _join_case(1)
+    stacked = jax.tree_util.tree_map(lambda x: jnp.stack([x, x]), a)
+    assert round_bound(stacked) == round_bound(a)
+
+
+def test_round_bound_traced_tables_fall_back_to_chain_term():
+    """Under jit/vmap the join tables are tracers; the bound degrades to the
+    chain-only term instead of crashing (sweeps that need the full bound
+    compute it host-side and pass SimOptions(max_rounds=...))."""
+    hops, ch, issue = _join_case(2)
+    h = int(hops.channel.shape[1])
+
+    @jax.jit
+    def probe(hops):
+        return jnp.int64(round_bound(hops))
+
+    assert int(probe(hops)) == 3 * h + 8
+
+
+# ---------------------------------------------------------------------------
+# sufficiency: the computed budget converges with zero residual
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_bound_sufficient_random_demand(seed):
+    hops, ch, issue, _ = _random_case(seed)
+    sched = simulate(hops, ch, jnp.asarray(issue))
+    assert bool(sched.converged)
+    assert int(sched.residual_ps) == 0
+    assert int(sched.rounds) <= round_bound(hops)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_bound_sufficient_fork_join(seed):
+    hops, ch, issue = _join_case(seed)
+    sched = simulate(hops, ch, jnp.asarray(issue))
+    assert bool(sched.converged)
+    assert int(sched.residual_ps) == 0
+    assert int(sched.rounds) <= round_bound(hops)
+
+
+@pytest.mark.parametrize("fanout", ["chain", "concurrent"])
+def test_bound_sufficient_coherence_lowering(fanout):
+    graph, spec = _star(2)
+    addr, wr, rid = make_skewed_stream(160, 64, write_ratio=0.4,
+                                       n_requesters=2, seed=9)
+    cfg = SFConfig(capacity=24, policy="fifo", footprint_lines=64)
+    _, ev = simulate_sf(addr, wr, rid, cfg, CacheConfig(capacity=24),
+                        n_requesters=2, return_events=True)
+    low = lower_coherence(graph, spec, cfg, addr, wr, rid, ev, fanout=fanout)
+    issue = coherence_issue(low, ev.fab_issue_ps)
+    sched = simulate(low.hops, make_channels(graph), issue)
+    assert bool(sched.converged)
+    assert int(sched.residual_ps) == 0
+    assert int(sched.rounds) <= round_bound(low.hops)
+
+
+def test_bound_sufficient_stream_carry():
+    hops, ch, issue = _join_case(5)
+    out = simulate_stream(stream_windows(hops, np.asarray(issue), 7), ch)
+    assert out.converged and out.oracle_windows == 0
+    assert out.residual_ps == 0
+
+
+def test_truncated_budget_reports_residual():
+    hops, ch, issue = _tight_feedback_case(n=600, h=6)
+    sched = simulate(hops, ch, jnp.asarray(issue), SimOptions(max_rounds=1))
+    assert not bool(sched.converged)
+    assert int(sched.residual_ps) > 0
+
+
+# ---------------------------------------------------------------------------
+# verifier finding: explicit budgets below the computed bound
+# ---------------------------------------------------------------------------
+
+def test_verify_flags_budget_below_bound():
+    hops, ch, issue = _join_case(4)
+    bound = round_bound(hops)
+    rep = verify_workload(hops, ch, issue, max_rounds=bound - 1)
+    assert any(f.code == "join.depth" for f in rep.findings)
+    rep_ok = verify_workload(hops, ch, issue, max_rounds=bound)
+    assert not any(f.code == "join.depth" for f in rep_ok.findings)
+
+
+# ---------------------------------------------------------------------------
+# the unified options surface + deprecated shims
+# ---------------------------------------------------------------------------
+
+def test_simoptions_validation():
+    with pytest.raises(ValueError, match="check"):
+        SimOptions(check="paranoid")
+    hops, ch, issue, _ = _random_case(1)
+    with pytest.raises(TypeError, match="SimOptions"):
+        simulate(hops, ch, jnp.asarray(issue), {"max_rounds": 4})
+    assert SimOptions(use_kernel=False).kernel_impl == "scan"
+    assert SimOptions(use_kernel=True).kernel_impl == "auto"
+    assert SimOptions(use_kernel="ref").kernel_impl == "ref"
+
+
+def test_one_options_object_threads_through_every_entry_point():
+    opts = SimOptions(check="oracle")
+    hops, ch, issue, _ = _random_case(2)
+    sched = simulate(hops, ch, jnp.asarray(issue), opts)
+    sched2, used = simulate_auto(hops, ch, jnp.asarray(issue), opts)
+    assert not used
+    assert np.array_equal(np.asarray(sched.complete),
+                          np.asarray(sched2.complete))
+    out = simulate_stream(stream_windows(hops, np.asarray(issue), 9), ch,
+                          options=opts)
+    assert out.converged
+
+    graph, spec = _star(2)
+    addr, wr, rid = make_skewed_stream(80, 32, write_ratio=0.3,
+                                       n_requesters=2, seed=2)
+    cfg = SFConfig(capacity=16, policy="fifo", footprint_lines=32)
+    res = simulate_coupled(addr, wr, rid, cfg, CacheConfig(capacity=16),
+                           graph, spec, n_requesters=2, options=opts)
+    assert res.converged and res.rounds > 0
+
+
+def test_unified_result_diagnostics():
+    hops, ch, issue, _ = _random_case(5)
+    sched = simulate(hops, ch, jnp.asarray(issue))
+    for field in ("rounds", "converged", "residual_ps"):
+        assert hasattr(sched, field)
+    out = simulate_stream(stream_windows(hops, np.asarray(issue), 11), ch)
+    for field in ("rounds", "converged", "residual_ps"):
+        assert hasattr(out, field)
+    assert out.rounds == out.state.rounds_sum
+    from repro.core.coherence_traffic import CoupledResult
+    for field in ("rounds", "converged", "residual_ps"):
+        assert field in CoupledResult._fields
+
+
+def _deprecations(fn, *args, **kw):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kw)
+    return out, [str(w.message) for w in rec
+                 if issubclass(w.category, DeprecationWarning)]
+
+
+def test_deprecated_kwargs_warn_and_still_work():
+    hops, ch, issue, _ = _random_case(6)
+    want = simulate(hops, ch, jnp.asarray(issue))
+
+    got, msgs = _deprecations(simulate, hops, ch, jnp.asarray(issue),
+                              max_rounds=400)
+    assert len(msgs) == 1 and "SimOptions" in msgs[0]
+    assert np.array_equal(np.asarray(want.complete),
+                          np.asarray(got.complete))
+
+    (got2, used), msgs = _deprecations(simulate_auto, hops, ch,
+                                       jnp.asarray(issue), check=False)
+    assert len(msgs) == 1 and not used
+    assert np.array_equal(np.asarray(want.complete),
+                          np.asarray(got2.complete))
+
+    # legacy positional int budget in the options slot
+    got3, msgs = _deprecations(simulate, hops, ch, jnp.asarray(issue), 400)
+    assert len(msgs) == 1
+    assert np.array_equal(np.asarray(want.complete),
+                          np.asarray(got3.complete))
+
+    out, msgs = _deprecations(
+        simulate_stream, stream_windows(hops, np.asarray(issue), 9), ch,
+        max_rounds=400, oracle_fallback=True, static_check=False)
+    assert len(msgs) == 3 and out.converged
+
+    graph, spec = _star(2)
+    addr, wr, rid = make_skewed_stream(60, 32, write_ratio=0.3,
+                                       n_requesters=2, seed=3)
+    cfg = SFConfig(capacity=16, policy="fifo", footprint_lines=32)
+    res, msgs = _deprecations(
+        simulate_coupled, addr, wr, rid, cfg, CacheConfig(capacity=16),
+        graph, spec, n_requesters=2, max_rounds=400, damping=False)
+    assert len(msgs) == 2 and res.converged

@@ -17,8 +17,8 @@ from repro.core.coherence_traffic import (CoherenceFabricSpec,
                                           CoherenceStream, coherence_issue,
                                           lower_coherence)
 from repro.core.devices import RequesterSpec, build_workload
-from repro.core.engine import (Channels, Hops, empty_carry, simulate,
-                               simulate_auto)
+from repro.core.engine import (Channels, Hops, SimOptions, empty_carry,
+                               simulate, simulate_auto)
 from repro.core.link_layer import FlitConfig
 from repro.core.snoop_filter import (CacheConfig, SFConfig, make_skewed_stream,
                                      sf_init_state, simulate_sf)
@@ -145,14 +145,14 @@ def _join_case(seed, layers=3):
     return hops, ch, issue
 
 
-def _stream_check(hops, ch, issue, window, max_rounds=400):
+def _stream_check(hops, ch, issue, window):
     """Windowed run == monolithic run, bit for bit: every valid item's
     (start, depart, arrive) exactly once, every row's completion and gated
     first-hop arrival."""
-    mono = simulate(hops, ch, jnp.asarray(issue), max_rounds=max_rounds)
+    mono = simulate(hops, ch, jnp.asarray(issue))
     assert bool(mono.converged)
     out = simulate_stream(stream_windows(hops, issue, window), ch,
-                          max_rounds=max_rounds, collect_schedule=True)
+                          collect_schedule=True)
     col = out.collected
     v = np.asarray(hops.valid)
     n, h = v.shape
@@ -301,16 +301,16 @@ def test_stream_state_resumes_across_calls():
 
 def test_empty_carry_is_identity():
     hops, ch, issue = _random_case(5)
-    base = simulate(hops, ch, jnp.asarray(issue), max_rounds=400)
+    base = simulate(hops, ch, jnp.asarray(issue))
     c = int(ch.bw_MBps.shape[0])
-    seeded = simulate(hops, ch, jnp.asarray(issue), max_rounds=400,
+    seeded = simulate(hops, ch, jnp.asarray(issue),
                       carry=empty_carry(c))
     for f in ("start", "depart", "arrive", "complete"):
         assert np.array_equal(np.asarray(getattr(base, f)),
                               np.asarray(getattr(seeded, f))), f
     hj, chj, ij = _join_case(5)
-    bj = simulate(hj, chj, jnp.asarray(ij), max_rounds=400)
-    sj = simulate(hj, chj, jnp.asarray(ij), max_rounds=400,
+    bj = simulate(hj, chj, jnp.asarray(ij))
+    sj = simulate(hj, chj, jnp.asarray(ij),
                   carry=empty_carry(int(chj.bw_MBps.shape[0]),
                                     int(hj.channel.shape[0])))
     assert np.array_equal(np.asarray(bj.complete), np.asarray(sj.complete))
@@ -318,15 +318,17 @@ def test_empty_carry_is_identity():
 
 def test_simulate_auto_check_flag_skips_fallback():
     hops, ch, issue = _random_case(7)
-    # forced non-convergence: check=True falls back to the oracle ...
-    sched, used = simulate_auto(hops, ch, jnp.asarray(issue), max_rounds=1)
+    # forced non-convergence: the default falls back to the oracle ...
+    sched, used = simulate_auto(hops, ch, jnp.asarray(issue),
+                                SimOptions(max_rounds=1))
     assert used and bool(sched.converged)
-    # ... check=False returns the raw fixpoint without the host sync
-    raw, used = simulate_auto(hops, ch, jnp.asarray(issue), max_rounds=1,
-                              check=False)
+    # ... check='off' returns the raw fixpoint without the host sync
+    raw, used = simulate_auto(hops, ch, jnp.asarray(issue),
+                              SimOptions(max_rounds=1, check="off"))
     assert not used and not bool(raw.converged)
-    # on a converged run check=False is the same schedule
-    full, used = simulate_auto(hops, ch, jnp.asarray(issue), check=False)
+    # on a converged run check='off' is the same schedule
+    full, used = simulate_auto(hops, ch, jnp.asarray(issue),
+                               SimOptions(check="off"))
     ref, _ = simulate_auto(hops, ch, jnp.asarray(issue))
     assert not used
     assert np.array_equal(np.asarray(full.complete), np.asarray(ref.complete))

@@ -33,8 +33,9 @@ import jax.numpy as jnp
 import repro.core  # noqa: F401  (x64)
 from repro.core import topology as T
 from repro.core.devices import RequesterSpec, build_workload
-from repro.core.engine import (Channels, Hops, channel_stats, make_channels,
-                               replay_round, simulate)
+from repro.core.engine import (Channels, Hops, SimOptions, channel_stats,
+                               make_channels, replay_round, round_bound,
+                               simulate)
 from repro.core.link_layer import FlitConfig
 from repro.core.ref_des import ref_schedule, simulate_ref
 from repro.core.snoop_filter import (CacheConfig, SFConfig,
@@ -134,7 +135,7 @@ def _assert_conserved(hops, ch, sched, issue):
 @settings(max_examples=12, deadline=None)
 def test_conservation_flit_reliability(seed, mode):
     wl = _bus_wl(FLIT_CONFIGS[mode], n=40, seed=seed % 97)
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     assert bool(sched.converged)
     att = _assert_conserved(wl.hops, wl.channels, sched, wl.issue_ps)
     if mode == "stochastic":
@@ -147,7 +148,7 @@ def test_conservation_flit_reliability(seed, mode):
 @settings(max_examples=10, deadline=None)
 def test_conservation_joins(seed):
     hops, ch, issue = _join_case(seed)
-    sched = simulate(hops, ch, issue, max_rounds=400)
+    sched = simulate(hops, ch, issue)
     assert bool(sched.converged)
     att = _assert_conserved(hops, ch, sched, issue)
     # the waiter really attributes its release stall to join_wait
@@ -169,7 +170,7 @@ def test_conservation_coupled_coherence():
 @pytest.mark.parametrize("mode", sorted(FLIT_CONFIGS))
 def test_metrics_equal_engine_vs_oracle(mode):
     wl = _bus_wl(FLIT_CONFIGS[mode], n=50)
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     ref = ref_schedule(simulate_ref(wl.hops, wl.channels, wl.issue_ps))
     a = tm.attribute_latency(wl.hops, wl.channels, sched, wl.issue_ps)
     b = tm.attribute_latency(wl.hops, wl.channels, ref, wl.issue_ps)
@@ -188,11 +189,11 @@ def test_metrics_equal_engine_vs_oracle(mode):
 def test_telemetry_is_pure_observer():
     """Schedules are bit-exact with metrics on vs. off."""
     wl = _bus_wl(FLIT_CONFIGS["stochastic"], n=50)
-    before = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    before = simulate(wl.hops, wl.channels, wl.issue_ps)
     snap = {f: np.asarray(getattr(before, f)).copy() for f in before._fields}
     tm.fabric_metrics(wl.hops, wl.channels, before, wl.issue_ps)
     tx.schedule_trace(wl.hops, wl.channels, before)
-    after = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    after = simulate(wl.hops, wl.channels, wl.issue_ps)
     for f in before._fields:
         assert np.array_equal(snap[f], np.asarray(getattr(after, f))), f
 
@@ -202,7 +203,7 @@ def test_replay_round_reproduces_fixpoint():
     the property the retraining-stall extraction rests on."""
     for mode in ("byte", "stochastic"):
         wl = _bus_wl(FLIT_CONFIGS[mode], n=50)
-        sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+        sched = simulate(wl.hops, wl.channels, wl.issue_ps)
         start, depart, stall = replay_round(wl.hops, wl.channels, sched)
         assert np.array_equal(np.asarray(start), np.asarray(sched.start))
         assert np.array_equal(np.asarray(depart), np.asarray(sched.depart))
@@ -235,11 +236,13 @@ def test_metrics_jit_vmap_ber_sweep():
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                      *[pad(w.hops) for w in wls])
     ch, issue = wls[0].channels, wls[0].issue_ps
+    # the join tables are vmapped tracers inside `sweep`, so resolve the
+    # round bound host-side from the concrete stacked hops
+    opts = SimOptions(max_rounds=round_bound(stacked))
 
     @jax.jit
     def sweep(hops):
-        sched = jax.vmap(lambda h: simulate(h, ch, issue,
-                                            max_rounds=200))(hops)
+        sched = jax.vmap(lambda h: simulate(h, ch, issue, opts))(hops)
         att = jax.vmap(lambda h, s: tm.attribute_latency(h, ch, s,
                                                          issue))(hops, sched)
         chans = jax.vmap(lambda h, s: tm.channel_telemetry(h, ch,
@@ -256,7 +259,7 @@ def test_metrics_jit_vmap_ber_sweep():
     assert stalls[1] > stalls[0]
     assert q.shape == (2, 3) and bool((q[:, 0] <= q[:, 2]).all())
     # vmapped rows equal the per-workload scalar path
-    solo = simulate(wls[0].hops, ch, issue, max_rounds=200)
+    solo = simulate(wls[0].hops, ch, issue)
     att0 = tm.attribute_latency(wls[0].hops, ch, solo, issue)
     assert np.array_equal(np.asarray(att.total_ps[0]),
                           np.asarray(att0.total_ps))
@@ -268,7 +271,7 @@ def test_metrics_jit_vmap_ber_sweep():
 
 def test_channel_telemetry_matches_channel_stats():
     wl = _bus_wl(FLIT_CONFIGS["flit"], n=60)
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     ct = tm.channel_telemetry(wl.hops, wl.channels, sched)
     cs = channel_stats(wl.hops, sched, wl.channels)
     assert np.array_equal(np.asarray(ct.busy_ps), np.asarray(cs["busy_ps"]))
@@ -307,7 +310,7 @@ def test_peak_backlog_hand_case():
 
 def test_windowed_series_sums_to_totals():
     wl = _bus_wl(FLIT_CONFIGS["replay"], n=60)
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     ws = tm.windowed_series(wl.hops, wl.channels, sched, wl.issue_ps,
                             n_bins=16)
     ct = tm.channel_telemetry(wl.hops, wl.channels, sched)
@@ -425,7 +428,7 @@ def test_coupled_residual_history():
 
 def _trace_for(mode):
     wl = _bus_wl(FLIT_CONFIGS[mode], n=40)
-    sched = simulate(wl.hops, wl.channels, wl.issue_ps, max_rounds=200)
+    sched = simulate(wl.hops, wl.channels, wl.issue_ps)
     return tx.schedule_trace(wl.hops, wl.channels, sched)
 
 

@@ -74,7 +74,7 @@ def test_vmapped_bandwidth_sweep_monotone():
         ch = Channels(jnp.where(svc, wl.channels.bw_MBps, bw),
                       wl.channels.turnaround_ps, wl.channels.row_hit_ps,
                       wl.channels.row_miss_ps)
-        s = simulate(wl.hops, ch, wl.issue_ps, max_rounds=60)
+        s = simulate(wl.hops, ch, wl.issue_ps)
         return jnp.max(s.complete), s.converged
 
     makespans, conv = jax.vmap(one)(bws)

@@ -214,15 +214,16 @@ def test_assert_valid_raises_with_report():
 
 
 def test_simulate_auto_static_check():
-    from repro.core.engine import simulate_auto
+    from repro.core.engine import SimOptions, simulate_auto
     hops, ch, issue = tiny()
-    s, used_oracle = simulate_auto(hops, ch, issue, check="static")
+    s, used_oracle = simulate_auto(hops, ch, issue,
+                                   SimOptions(check="static"))
     assert bool(s.converged) or used_oracle
     bad = np.asarray(hops.channel).copy()
     bad[0, 0] = C + 4
     with pytest.raises(verify.VerifyError):
         simulate_auto(hops._replace(channel=jnp.asarray(bad)), ch, issue,
-                      check="static")
+                      SimOptions(check="static"))
 
 
 # ---------------------------------------------------------------------------
